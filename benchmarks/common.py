@@ -1,0 +1,26 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+from repro.core import IANUS_HW, NPU_MEM_HW, PASPolicy
+from repro.sim import SimConfig, Simulator
+
+ISSUE = 0.1e-6
+
+
+def ianus_sim(**kw):
+    kw.setdefault("hw", IANUS_HW)
+    kw.setdefault("issue_overhead", ISSUE)
+    return Simulator(SimConfig(**kw))
+
+
+def npumem_sim(**kw):
+    kw.setdefault("hw", NPU_MEM_HW)
+    kw.setdefault("issue_overhead", ISSUE)
+    return Simulator(SimConfig(**kw))
+
+
+def emit(rows, header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

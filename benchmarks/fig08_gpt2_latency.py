@@ -1,0 +1,39 @@
+"""Figure 8: end-to-end GPT-2 latency, IANUS vs A100, over the full
+(input x output) grid. Paper headline: 4.3x avg for 2.5B; 6.2x overall;
+12.0/8.1/6.6x for M/L/XL at (128,512)."""
+import itertools
+
+import numpy as np
+
+from benchmarks.common import emit, ianus_sim
+from repro.configs import paper_models as pm
+from repro.core import PASPolicy
+from repro.sim import baselines, graphs
+
+GRID = list(itertools.product((128, 256, 512), (1, 8, 64, 512)))
+
+
+def run():
+    sim = ianus_sim()
+    pol = PASPolicy.paper()
+    rows = []
+    speedups = []
+    for name, cfg in pm.PAPER_GPT2.items():
+        per_model = []
+        for n_in, n_out in GRID:
+            r = graphs.e2e_latency(sim, cfg, n_in, n_out, pol)
+            a = baselines.A100.e2e(cfg, n_in, n_out)
+            s = a["total"] / r["total"]
+            per_model.append(s)
+            rows.append((f"fig08/{name}/in{n_in}_out{n_out}",
+                         r["total"] * 1e6, f"speedup_vs_a100={s:.2f}"))
+        speedups += per_model
+        rows.append((f"fig08/{name}/avg", 0.0,
+                     f"avg_speedup={np.mean(per_model):.2f}"))
+    rows.append(("fig08/overall", 0.0,
+                 f"avg_speedup={np.mean(speedups):.2f} (paper 6.2)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,42 @@
+"""Figure 9: GPT-2 XL latency on DFX vs NPU-MEM vs IANUS (DFX's configs).
+Paper: IANUS 3.2x vs DFX average; 49.3x at (128,1); NPU-MEM 24% slower
+than DFX; XL token 3.8 ms vs DFX 6.9 ms at (64,256)."""
+import numpy as np
+
+from benchmarks.common import emit, ianus_sim, npumem_sim
+from repro.configs import paper_models as pm
+from repro.core import PASPolicy
+from repro.sim import baselines, graphs
+
+# token configs from DFX [19]
+GRID = [(32, 1), (64, 1), (128, 1), (32, 32), (64, 64), (128, 128),
+        (64, 256), (128, 512)]
+
+
+def run():
+    cfg = pm.GPT2_XL
+    sim, simn = ianus_sim(), npumem_sim()
+    pol = PASPolicy.paper()
+    rows, s_dfx, s_npu = [], [], []
+    for n_in, n_out in GRID:
+        r = graphs.e2e_latency(sim, cfg, n_in, n_out, pol)
+        rn = graphs.e2e_latency(simn, cfg, n_in, n_out, pol)
+        d = baselines.DFX.e2e(cfg, n_in, n_out)
+        s_dfx.append(d["total"] / r["total"])
+        s_npu.append(d["total"] / rn["total"])
+        rows.append((f"fig09/xl/in{n_in}_out{n_out}", r["total"] * 1e6,
+                     f"vs_dfx={d['total']/r['total']:.2f};"
+                     f"npumem_vs_dfx={d['total']/rn['total']:.2f}"))
+    rows.append(("fig09/avg_vs_dfx", 0.0,
+                 f"{np.mean(s_dfx):.2f} (paper 3.2)"))
+    rows.append(("fig09/npumem_vs_dfx", 0.0,
+                 f"{np.mean(s_npu):.2f} (paper 0.76: NPU-MEM 24% slower)"))
+    # per-token generation anchors
+    step = graphs.generation_step_latency(sim, cfg, 64 + 128, pol)
+    rows.append(("fig09/xl_token_64_256", step.makespan * 1e6,
+                 "paper 3.8ms (DFX 6.9ms)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,32 @@
+"""Figure 10: generation-stage latency breakdown, NPU-MEM vs IANUS
+(GPT-2 L and XL). Paper: FC 4.1x, FFN 5.1x, self-attn 4.3x, overall 4.0x
+(XL) / 3.6x (L). Attribution = exposed wall-time (hidden DMA costs zero)."""
+from benchmarks.common import emit, ianus_sim, npumem_sim
+from repro.configs import paper_models as pm
+from repro.core import PASPolicy
+from repro.sim import graphs
+
+TAGS = ("fc_mha", "ffn", "self_attn", "norm_res", "lm_head")
+
+
+def run():
+    rows = []
+    pol = PASPolicy.paper()
+    for name, cfg, kv in (("xl", pm.GPT2_XL, 192), ("l", pm.GPT2_L, 192)):
+        r = graphs.generation_step_latency(
+            ianus_sim(trace=True), cfg, kv, pol)
+        rn = graphs.generation_step_latency(
+            npumem_sim(trace=True), cfg, kv, pol)
+        et, etn = r.exposed_tag_time(), rn.exposed_tag_time()
+        for tag in TAGS:
+            a, b = etn.get(tag, 0.0), et.get(tag, 1e-12)
+            rows.append((f"fig10/{name}/{tag}", b * 1e6,
+                         f"npumem_over_ianus={a/b:.2f}"))
+        rows.append((f"fig10/{name}/overall", r.makespan * 1e6,
+                     f"speedup={rn.makespan/r.makespan:.2f} "
+                     f"(paper {'4.0' if name=='xl' else '3.6'})"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

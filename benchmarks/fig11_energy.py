@@ -1,0 +1,41 @@
+"""Figure 11: dynamic energy, IANUS vs NPU-MEM, (256,512), normalized to
+IANUS GPT-2 M. Paper: 3.7/3.6/3.9/4.4x energy-efficiency gains."""
+from benchmarks.common import emit, ianus_sim, npumem_sim
+from repro.configs import paper_models as pm
+from repro.core import PASPolicy
+from repro.sim import graphs
+from repro.sim.energy import energy_of
+
+
+def _e2e_energy(sim, cfg, pol):
+    """Energy of summarization + per-step generation integrated over steps
+    (affine in kv, so sample two points like the latency composer)."""
+    s = sim.run(graphs.build_stage(cfg, 256, 256, "summarization", pol,
+                                   hw=sim.cfg.hw))
+    e = dict(s.energy)
+    r1 = graphs.generation_step_latency(sim, cfg, 257, pol)
+    r2 = graphs.generation_step_latency(sim, cfg, 256 + 512, pol)
+    for k in e:
+        e[k] += 512 * (r1.energy[k] + r2.energy[k]) / 2.0
+    return energy_of(e)
+
+
+def run():
+    pol = PASPolicy.paper()
+    base = None
+    rows = []
+    for name, cfg in pm.PAPER_GPT2.items():
+        ei = _e2e_energy(ianus_sim(), cfg, pol)
+        en = _e2e_energy(npumem_sim(), cfg, pol)
+        if base is None:
+            base = ei.total
+        rows.append((f"fig11/{name}", 0.0,
+                     f"ianus_rel={ei.total/base:.2f};"
+                     f"npumem_rel={en.total/base:.2f};"
+                     f"gain={en.total/ei.total:.2f}"))
+    rows.append(("fig11/paper", 0.0, "paper gains: 3.7/3.6/3.9/4.4"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,52 @@
+"""Figure 12: adaptive FC mapping (Algorithm 1) vs always-PIM / always-MU,
+input tokens in {4, 8, 16}. Paper: adaptive = 1.4x vs PIM-only, 1.2x vs
+MU-only on average; PIM wins at n=8 for the 1024-aligned models (M, 2.5B)."""
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, ianus_sim
+from repro.configs import paper_models as pm
+from repro.core import Command, FCConfig, IANUS_HW, MU, PIM, adaptive_map
+from repro.core.cost_model import mu_fc_time, pim_fc_time, pipelined_mu_time
+from repro.sim import graphs
+from repro.core.pas import PASPolicy
+
+
+def _ffn_time(cfg, n, mode):
+    """One FFN (the Fig. 12 unit of work) under the three mappings."""
+    hw = IANUS_HW
+    fc1, fc2 = FCConfig(cfg.d_model, cfg.d_ff), FCConfig(cfg.d_ff, cfg.d_model)
+    mu = pipelined_mu_time(hw, n, fc1) + pipelined_mu_time(hw, n, fc2)
+    pim = pim_fc_time(hw, n, fc1) + pim_fc_time(hw, n, fc2)
+    if mode == "mu":
+        return mu
+    if mode == "pim":
+        return pim
+    # adaptive: per-FC best (Algorithm 1)
+    return (min(pipelined_mu_time(hw, n, fc1), pim_fc_time(hw, n, fc1))
+            + min(pipelined_mu_time(hw, n, fc2), pim_fc_time(hw, n, fc2)))
+
+
+def run():
+    rows = []
+    gains_pim, gains_mu = [], []
+    for name, cfg in pm.PAPER_GPT2.items():
+        for n in (4, 8, 16):
+            t_mu = _ffn_time(cfg, n, "mu")
+            t_pim = _ffn_time(cfg, n, "pim")
+            t_ad = _ffn_time(cfg, n, "adaptive")
+            gains_pim.append(t_pim / t_ad)
+            gains_mu.append(t_mu / t_ad)
+            win = "PIM" if t_pim <= t_mu else "MU"
+            rows.append((f"fig12/{name}/n{n}", t_ad * 1e6,
+                         f"vs_pim={t_pim/t_ad:.2f};vs_mu={t_mu/t_ad:.2f};"
+                         f"winner={win}"))
+    rows.append(("fig12/avg", 0.0,
+                 f"vs_pim={np.mean(gains_pim):.2f} (paper 1.4);"
+                 f"vs_mu={np.mean(gains_mu):.2f} (paper 1.2)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

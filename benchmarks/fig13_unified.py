@@ -1,0 +1,58 @@
+"""Figure 13: unified vs partitioned memory + scheduling/mapping ablation,
+(256,512). Bars per model: naive+PIM-mapped / scheduled+PIM-mapped /
+scheduled+MU-mapped, each on partitioned and unified (IANUS) memory.
+Paper: partitioned scheduling gain 1.3x; unified over scheduled-partitioned
+1.4-1.6x; scheduling overall +34%; 2.5B partitioned pays transfers."""
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, ianus_sim
+from repro.configs import paper_models as pm
+from repro.core import PASPolicy, PIM, MU, partitioned_plan
+from repro.sim import SimConfig, Simulator, graphs
+from repro.core.cost_model import IANUS_HW
+
+
+def _lat(cfg, unified, scheduled, qk_sv):
+    sim = Simulator(SimConfig(hw=IANUS_HW, unified=unified,
+                              scheduled=scheduled, issue_overhead=0.1e-6))
+    pol = dataclasses.replace(PASPolicy.paper(), scheduled=scheduled,
+                              qk_sv_unit=qk_sv,
+                              unified_memory=unified)
+    r = graphs.e2e_latency(sim, cfg, 256, 512, pol)
+    t = r["total"]
+    if not unified:
+        # non-duplicable shared params are streamed from the PIM half every
+        # generation step (paper: the GPT-2 2.5B case)
+        plan = partitioned_plan(cfg, 8 << 30)
+        t += 512 * plan.transfer_bytes_per_step / (IANUS_HW.ext_bw *
+                                                   IANUS_HW.ext_bw_eff)
+    return t
+
+
+def run():
+    rows = []
+    uni_gains, sched_gains = [], []
+    for name, cfg in pm.PAPER_GPT2.items():
+        part_naive = _lat(cfg, False, False, PIM)
+        part_sched = _lat(cfg, False, True, MU)
+        uni_naive = _lat(cfg, True, False, PIM)
+        uni_pim = _lat(cfg, True, True, PIM)
+        uni_mu = _lat(cfg, True, True, MU)
+        uni_gains.append(part_sched / uni_mu)
+        sched_gains.append(uni_naive / uni_mu)
+        rows.append((f"fig13/{name}", uni_mu * 1e6,
+                     f"part_sched_gain={part_naive/part_sched:.2f};"
+                     f"unified_over_part={part_sched/uni_mu:.2f};"
+                     f"sched_pim_gain={uni_naive/uni_pim:.2f};"
+                     f"sched_total_gain={uni_naive/uni_mu:.2f}"))
+    rows.append(("fig13/avg", 0.0,
+                 f"unified_over_partitioned={np.mean(uni_gains):.2f} "
+                 f"(paper 1.4-1.6);"
+                 f"scheduling_gain={np.mean(sched_gains):.2f} (paper 1.34)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

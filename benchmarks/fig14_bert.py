@@ -1,0 +1,37 @@
+"""Figure 14: BERT throughput + compute utilization, IANUS vs A100.
+Paper: 3.1x/2.0x throughput for BERT-B/L; utilization 5.2/3.3/1.3/1.0x;
+larger models favor the GPU's higher peak FLOPS."""
+import numpy as np
+
+from benchmarks.common import emit, ianus_sim
+from repro.configs import paper_models as pm
+from repro.core import PASPolicy, IANUS_HW
+from repro.sim import baselines, graphs
+
+
+def run():
+    rows = []
+    pol = PASPolicy.paper()
+    sim = ianus_sim()
+    n = 384  # QA sequence length (mid input range)
+    for name, cfg in pm.PAPER_BERT.items():
+        # BERT = summarization-only, bidirectional, no LM-head GEMV
+        cmds = graphs.build_stage(cfg, n, n, "summarization", pol,
+                                  lm_head=False, causal=False,
+                                  hw=IANUS_HW)
+        r = sim.run(cmds)
+        a = baselines.A100.summarization(cfg, n, encoder_only=True)
+        flops = 2.0 * n * cfg.param_counts()["total"]
+        util_i = flops / (r.makespan * IANUS_HW.mu_flops)
+        util_a = flops / (a * baselines.A100.peak_flops)
+        rows.append((f"fig14/{name}", r.makespan * 1e6,
+                     f"tput_vs_a100={a/r.makespan:.2f};"
+                     f"util_ianus={util_i:.2f};util_a100={util_a:.2f};"
+                     f"util_ratio={util_i/util_a:.1f}"))
+    rows.append(("fig14/paper", 0.0,
+                 "paper tput: B 3.1x, L 2.0x; util ratios 5.2/3.3/1.3/1.0"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

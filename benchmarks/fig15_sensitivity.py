@@ -1,0 +1,37 @@
+"""Figure 15: sensitivity to NPU core count and PIM chip count, GPT-2 L,
+summarization-only (256,1) and generation-dominant (256,512), normalized to
+4 cores / 4 PIM chips. Paper: fewer cores hurt summarization most; PIM
+count dominates the generation case."""
+from benchmarks.common import emit, ISSUE
+from repro.configs import paper_models as pm
+from repro.core import PASPolicy, IANUS_HW
+from repro.sim import SimConfig, Simulator, graphs
+
+
+def run():
+    pol = PASPolicy.paper()
+    cfg = pm.GPT2_L
+    rows = []
+    base = {}
+    for case, (n_in, n_out) in (("sum", (256, 1)), ("gen", (256, 512))):
+        for cores, pims in [(1, 4), (2, 4), (4, 4), (8, 4),
+                            (4, 1), (4, 2), (4, 8)]:
+            hw = IANUS_HW.scaled(cores=cores, pim_chips=pims)
+            sim = Simulator(SimConfig(hw=hw, issue_overhead=ISSUE,
+                                      dma_engines_per_core=2))
+            r = graphs.e2e_latency(sim, cfg, n_in, n_out, pol)
+            key = (case, 4, 4)
+            if (cores, pims) == (4, 4):
+                base[case] = r["total"]
+            rows.append((f"fig15/{case}/c{cores}p{pims}", r["total"] * 1e6,
+                         "pending_norm"))
+    # normalize
+    out = []
+    for name, us, _ in rows:
+        case = name.split("/")[1]
+        out.append((name, us, f"norm={us/1e6/base[case]:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,36 @@
+"""Figures 17 & 18: multi-device IANUS scaling on GPT 6.7B/13B/30B vs one
+A100 (256:64 tokens) + strong scaling + TDP cost-efficiency (§7.2).
+Paper: 2.4x/3.4x/5.3x; strong scaling 2.5x at 4x devices; perf/TDP
+3.9x/2.7x/2.1x."""
+from benchmarks.common import emit
+from repro.configs import paper_models as pm
+from repro.sim import baselines, scaling
+
+TDP_A100 = 400.0
+TDP_IANUS = 120.0
+
+
+def run():
+    rows = []
+    for cfg, ndev, want in [(pm.GPT_6p7B, 2, 2.4), (pm.GPT_13B, 4, 3.4),
+                            (pm.GPT_30B, 8, 5.3)]:
+        r = scaling.multi_device_e2e(cfg, 256, 64, ndev)
+        a = baselines.A100.e2e(cfg, 256, 64)
+        s = a["total"] / r["total"]
+        cost_eff = s * TDP_A100 / (ndev * TDP_IANUS)
+        rows.append((f"fig17/{cfg.name}/x{ndev}", r["total"] * 1e6,
+                     f"speedup={s:.2f} (paper {want});"
+                     f"perf_per_tdp={cost_eff:.2f};comm_frac="
+                     f"{r['comm']/r['total']:.2f}"))
+    # Fig 18: strong scaling, 6.7B
+    t = {d: scaling.multi_device_e2e(pm.GPT_6p7B, 256, 64, d)["total"]
+         for d in (2, 4, 8)}
+    rows.append(("fig18/strong_6.7b_2to8", t[8] * 1e6,
+                 f"speedup={t[2]/t[8]:.2f} (paper ~2.5 at 4x devices)"))
+    rows.append(("fig18/strong_6.7b_2to4", t[4] * 1e6,
+                 f"speedup={t[2]/t[4]:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

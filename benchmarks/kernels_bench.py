@@ -1,0 +1,64 @@
+"""Kernel microbenches: XLA-oracle wall time on CPU (labelled as such — the
+TPU numbers come from the dry-run roofline; this validates the dispatch
+layer end-to-end and gives relative comparisons of the decode paths)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    # decode GEMV path vs padded GEMM path (the PAS decision, on CPU scale)
+    d, f = 1024, 4096
+    w = (jax.random.normal(key, (d, f)) * 0.02).astype(jnp.bfloat16)
+    x1 = jax.random.normal(key, (1, d)).astype(jnp.bfloat16)
+    x128 = jax.random.normal(key, (128, d)).astype(jnp.bfloat16)
+    pad = jnp.zeros((127, d), jnp.bfloat16)
+
+    t_gemv = _time(ops.fused_matvec, x1, w, None, "gelu", impl="xla")
+    t_padded = _time(ops.fused_matvec, jnp.concatenate([x1, pad]), w, None,
+                     "gelu", impl="xla")
+    t_full = _time(ops.fused_matvec, x128, w, None, "gelu", impl="xla")
+    rows.append(("kern/fused_matvec_n1", t_gemv, "cpu_xla_oracle"))
+    rows.append(("kern/fused_matvec_n1_padded128", t_padded,
+                 f"pad_waste={t_padded/t_gemv:.1f}x (the PAS GEMM penalty)"))
+    rows.append(("kern/fused_matvec_n128", t_full,
+                 f"amortized={t_full/t_gemv:.1f}x_for_128x_work"))
+
+    # flash-decode vs materialized attention at 8k cache
+    B, H, KH, S, D = 4, 8, 8, 8192, 64
+    q = jax.random.normal(key, (B, H, D)).astype(jnp.bfloat16)
+    k = jax.random.normal(key, (B, KH, S, D)).astype(jnp.bfloat16)
+    v = jax.random.normal(key, (B, KH, S, D)).astype(jnp.bfloat16)
+    lens = jnp.full((B,), S, jnp.int32)
+    t_dec = _time(ops.decode_attention, q, k, v, lens, impl="xla")
+    rows.append(("kern/decode_attention_8k", t_dec, "cpu_xla_oracle"))
+
+    # interpret-mode correctness spot (ties the Pallas path into the bench)
+    got = ops.fused_matvec(x1[:, :256], w[:256, :512], None, "none",
+                           impl="interpret")
+    want = ops.fused_matvec(x1[:, :256], w[:256, :512], None, "none",
+                            impl="xla")
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    rows.append(("kern/pallas_interpret_check", 0.0, f"max_err={err:.5f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,42 @@
+"""Benchmark runner: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit)."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig08_gpt2_latency, fig09_dfx, fig10_breakdown,
+                            fig11_energy, fig12_adaptive, fig13_unified,
+                            fig14_bert, fig15_sensitivity, fig17_scaling,
+                            kernels_bench)
+
+    modules = [fig08_gpt2_latency, fig09_dfx, fig10_breakdown, fig11_energy,
+               fig12_adaptive, fig13_unified, fig14_bert, fig15_sensitivity,
+               fig17_scaling, kernels_bench]
+    print("name,us_per_call,derived")
+    failed = []
+    for m in modules:
+        try:
+            for name, us, derived in m.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            failed.append(m.__name__)
+            traceback.print_exc()
+    # roofline (requires dry-run artifacts; skipped gracefully if absent)
+    try:
+        from benchmarks import roofline
+        for rec in roofline.load_records(roofline.ARTIFACT_DIR):
+            if rec.get("ok"):
+                r = roofline.analyze(rec)
+                print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+                      f"{r['bound_s']*1e6:.1f},"
+                      f"dom={r['dominant']};frac={r['roofline_frac']:.3f}")
+    except Exception:
+        traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

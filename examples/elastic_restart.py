@@ -1,0 +1,38 @@
+"""Fault tolerance demo: crash mid-training (injected), restart, resume from
+the atomic checkpoint — the single-host rehearsal of the production
+checkpoint/restart + elastic-resume path.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def main():
+    with tempfile.TemporaryDirectory() as ck:
+        base = [sys.executable, "-m", "repro.launch.train",
+                "--arch", "llama3.2-1b", "--smoke", "--steps", "80",
+                "--batch", "4", "--seq", "32", "--ckpt-dir", ck,
+                "--ckpt-every", "20", "--log-every", "20"]
+
+        print("=== run 1: will crash at step 50 ===")
+        r = subprocess.run(base + ["--fail-at-step", "50"], env=ENV,
+                           capture_output=True, text=True)
+        print(r.stdout)
+        assert r.returncode == 17, "expected the injected crash"
+
+        print("=== run 2: restart, resume from the checkpoint ===")
+        r = subprocess.run(base, env=ENV, capture_output=True, text=True)
+        print(r.stdout)
+        assert r.returncode == 0
+        assert "resumed" in r.stdout
+        print("fault-tolerant restart verified.")
+
+
+if __name__ == "__main__":
+    main()

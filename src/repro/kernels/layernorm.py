@@ -1,0 +1,47 @@
+"""layernorm — the paper's two-phase VU LayerNorm (§4.2.2).
+
+"Given the limited amount of on-chip memory within the vector unit, a
+two-phase approach is used where the VU calculates the mean and variance of
+the tokens in the first phase while the normalization is done in the second
+phase." The kernel mirrors this: phase 1 reduces stats over the feature dim,
+phase 2 normalizes — both phases on one VMEM-resident row block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    # phase 1: statistics
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    # phase 2: normalize + affine
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * s_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, *,
+              eps: float = 1e-5, block_rows: int = 256,
+              interpret: bool = False) -> jax.Array:
+    """x: (rows, d); scale/bias: (d,)."""
+    rows, d = x.shape
+    br = min(block_rows, rows)
+    assert rows % br == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, scale, bias)

@@ -1,0 +1,45 @@
+"""masked_softmax — the paper's fused VU kernel (§4.2.2).
+
+"We combine masking and softmax within a single kernel. Each mask is stored
+as a 1-bit bitmap... we subtract the max value for stability." On TPU this is
+a VPU kernel: one row block per grid step, bitmap unpacked in-register,
+max-subtract + exp + normalize without leaving VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, mask_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    keep = mask_ref[...] != 0
+    x = jnp.where(keep, x, NEG_INF)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m) * keep.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    o_ref[...] = (e / denom).astype(o_ref.dtype)
+
+
+def masked_softmax(x: jax.Array, mask_bitmap: jax.Array, *,
+                   block_rows: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    """x: (rows, n); mask_bitmap: (rows, n) int8/bool (nonzero = keep).
+    Softmax over the last dim; a row must fit one VMEM block."""
+    rows, n = x.shape
+    br = min(block_rows, rows)
+    assert rows % br == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=interpret,
+    )(x, mask_bitmap.astype(jnp.int8))

@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Tests sweep shapes/dtypes and assert_allclose kernels (interpret mode on CPU,
+compiled on TPU) against these references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matvec_ref(x: jax.Array, w: jax.Array, bias=None,
+               activation: str = "none") -> jax.Array:
+    """x: (n, d_in); w: (d_in, d_out) -> (n, d_out), f32 accumulation."""
+    out = jnp.einsum("nd,df->nf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if activation == "gelu":
+        out = jax.nn.gelu(out)
+    elif activation == "silu":
+        out = jax.nn.silu(out)
+    return out.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True) -> jax.Array:
+    """q: (B,H,S,D); k,v: (B,KH,S,D). Dense reference attention."""
+    B, H, S, D = q.shape
+    KH = k.shape[1]
+    qg = q.reshape(B, KH, H // KH, S, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(D).astype(jnp.float32)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bkcd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths) -> jax.Array:
+    """q: (B,H,D); k,v: (B,KH,S,D); lengths: (B,) valid prefix lengths."""
+    B, H, D = q.shape
+    KH, S = k.shape[1], k.shape[2]
+    qg = q.reshape(B, KH, H // KH, D).astype(jnp.float32) / jnp.sqrt(D)
+    s = jnp.einsum("bkgd,bkcd->bkgc", qg, k.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bkcd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def masked_softmax_ref(x, mask_bitmap) -> jax.Array:
+    """x: (..., n); mask_bitmap: (..., n) bool (True = keep).
+    Max-subtracted softmax with masked positions zeroed (paper §4.2.2)."""
+    xf = x.astype(jnp.float32)
+    xf = jnp.where(mask_bitmap, xf, -1e30)
+    m = jnp.max(xf, axis=-1, keepdims=True)
+    e = jnp.exp(xf - m) * mask_bitmap.astype(jnp.float32)
+    return (e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+            ).astype(x.dtype)
+
+
+def layernorm_ref(x, scale, bias, eps: float = 1e-5) -> jax.Array:
+    """x: (n, d). Two-phase LN (stats then normalize), f32 math."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv_chunk_ref(r, k, v, w, u, s0) -> tuple:
+    """Sequential oracle for the RWKV6 wkv kernel.
+    r,k,v,w: (T, K); u: (K,); s0: (K, V) with K==V dims. Returns (y (T,V), s_T)."""
+    T, K = r.shape
+    s = s0.astype(jnp.float32)
+
+    def step(s, t):
+        rt, kt, vt, wt = (a[t].astype(jnp.float32) for a in (r, k, v, w))
+        y = rt @ (s + jnp.outer(u.astype(jnp.float32) * kt, vt))
+        s = wt[:, None] * s + jnp.outer(kt, vt)
+        return s, y
+
+    s, ys = jax.lax.scan(step, s, jnp.arange(T))
+    return ys.astype(r.dtype), s
+
+
+def mamba_chunk_ref(a, u, C):
+    """Sequential oracle for the Mamba selective-scan kernel.
+    a, u: (T, d, n); C: (T, n). Returns (y (T, d), h_T (d, n)); h_0 = 0."""
+    T, d, n = a.shape
+    h = jnp.zeros((d, n), jnp.float32)
+
+    def step(h, t):
+        h = a[t].astype(jnp.float32) * h + u[t].astype(jnp.float32)
+        y = jnp.sum(h * C[t].astype(jnp.float32)[None, :], axis=-1)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(T))
+    return ys.astype(a.dtype), h

@@ -1,0 +1,107 @@
+"""rwkv_chunk — MXU-friendly chunked RWKV6 wkv kernel.
+
+The XLA path (models/ssm.py) evaluates the recurrence with an associative
+scan of rank-1 state updates — VPU work. On TPU the throughput form is the
+*chunked linear attention* factorization: within a chunk of length C,
+
+    y_i = (r_i * Q_i) S0 + [tril(A, -1) + diag(b)] v        (matmuls!)
+    A_ij = (r_i * Q_i) . (k_j / Q_{j+1}),  b_i = (r_i * u) . k_i
+    S_C  = diag(Q_C) S0 + (k~ * Q_C)^T v
+
+with Q the exclusive cumulative decay. The pairwise decay ratio
+exp(logQ_i - logQ_{j+1}) is evaluated per (i, j, channel) in f32, which is
+numerically safe (ratios of nested products never explode for j < i).
+
+Grid: (B*H, n_chunks); chunks innermost dim carries the state scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_ref, *,
+            chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)            # (C, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)            # (C, V)
+    logw = jnp.log(jnp.maximum(w_ref[0].astype(jnp.float32), 1e-38))
+    u = u_ref[0].astype(jnp.float32)            # (K,)
+
+    logq = jnp.cumsum(logw, axis=0) - logw      # exclusive cumsum: logQ_i
+    logq_total = logq[-1] + logw[-1]            # logQ_C (full product)
+
+    # inter-chunk: y += (r * Q) @ S0
+    rq = r * jnp.exp(logq)                      # (C, K)
+    y = jax.lax.dot_general(rq, s_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # intra-chunk: pairwise decay ratios, strictly lower-triangular + bonus
+    # ratio[i, j, c] = exp(logQ_i[c] - logQ_{j+1}[c]) for j < i
+    logq_next = logq + logw                     # logQ_{j+1}
+    ratio = jnp.exp(
+        jnp.clip(logq[:, None, :] - logq_next[None, :, :], -60.0, 0.0))
+    att = jnp.einsum("ic,ijc,jc->ij", r, ratio, k)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(ii > jj, att, 0.0)
+    att = att + jnp.diag(jnp.sum(r * u[None, :] * k, axis=-1))
+    y = y + jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state advance: S_C = diag(Q_C) S0 + (k * Q_C/Q_{j+1})^T v
+    k_dec = k * jnp.exp(jnp.clip(logq_total[None, :] - logq_next, -60.0, 0.0))
+    s_new = jnp.exp(logq_total)[:, None] * s_ref[...] + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_ref[...] = s_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        s_out_ref[0] = s_ref[...]
+
+
+def rwkv_chunk(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, *, chunk: int = 64,
+               interpret: bool = False):
+    """r,k,v,w: (BH, T, K); u: (BH, K). Returns (y (BH,T,K), s_T (BH,K,K)).
+    Initial state is zero (prefill semantics)."""
+    BH, T, K = r.shape
+    c = min(chunk, T)
+    assert T % c == 0
+    n_chunks = T // c
+
+    kern = functools.partial(_kernel, chunk=c, n_chunks=n_chunks)
+    y, s_fin = pl.pallas_call(
+        kern,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, c, K), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, c, K), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, c, K), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, c, K), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, K), lambda b, ci: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, K), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, K, K), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, K), r.dtype),
+            jax.ShapeDtypeStruct((BH, K, K), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, s_fin

@@ -1,0 +1,84 @@
+"""HLO introspection: collective-byte extraction and cost scaling.
+
+XLA's cost_analysis does NOT multiply while-loop bodies by their trip count,
+and our models scan over layer superblocks. Totals are therefore derived by
+two-point extrapolation: lower the model at n_super=1 and n_super=2 (same
+HLO size, different trip count constants do not matter — the *cost
+difference* equals one superblock) and extend:
+
+    total(L) = cost(1) + (n_super - 1) * (cost(2) - cost(1))
+
+The same extrapolation applies to collective bytes parsed from the
+optimized per-device HLO text.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+# opcode match: plain or -start forms (the -done halves would double count)
+_COLL_OP_RE = re.compile(
+    r"\s(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+# any dtype[dims] result shape; XLA's combiner emits TUPLE-shaped collectives
+# (many gradient leaves in one all-reduce), so sum every shape in the LHS
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+# per-device traffic factor on a ring (bytes each chip puts on links,
+# relative to the op's per-device result shape)
+_RING_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str, chips: int) -> Dict[str, float]:
+    """Sum per-op collective traffic from optimized (SPMD, per-device) HLO.
+
+    Convention: collective_bytes = sum over ops of
+        per-device result bytes x ring factor x chips
+    i.e. total bytes crossing links fleet-wide (the roofline denominator is
+    chips x link_bw, so the ratio is per-chip link time)."""
+    per_op: Dict[str, float] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        m = _COLL_OP_RE.search(line)
+        if m is None:
+            continue
+        op = m.group(1)
+        lhs = line[:m.start()].split("=", 1)
+        if len(lhs) != 2:
+            continue
+        # shapes on the result side only (left of the opcode, right of name =)
+        shapes = _SHAPE_RE.findall(lhs[1])
+        b = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        b *= _RING_FACTOR[op] * chips
+        per_op[op] = per_op.get(op, 0.0) + b
+        total += b
+    per_op["total"] = total
+    return per_op
+
+
+def extrapolate(cost1: float, cost2: float, n_super: int) -> float:
+    """total(L) from costs at n_super=1 and 2."""
+    body = max(0.0, cost2 - cost1)
+    return cost1 + (n_super - 1) * body

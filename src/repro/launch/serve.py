@@ -1,0 +1,54 @@
+"""Serving launcher: batched request replay through the ServeEngine.
+
+  python -m repro.launch.serve --arch llama3.2-1b --smoke --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(max_slots=args.slots,
+                                  max_len=args.max_len))
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        plen = int(rng.integers(2, 10))
+        eng.add_request(rng.integers(0, cfg.vocab_size, plen),
+                        max_new_tokens=args.max_new)
+    t0 = time.time()
+    results = eng.run_until_done()
+    dt = time.time() - t0
+    tokens = sum(len(v) for v in results.values())
+    print(f"[serve] {len(results)} requests, {tokens} tokens "
+          f"in {dt:.2f}s ({tokens/dt:.1f} tok/s)")
+    gemv_steps = sum(1 for e in eng.pas_log if e["gemv_path"])
+    print(f"[serve] PAS: {gemv_steps}/{len(eng.pas_log)} steps on the "
+          f"GEMV (PIM-analogue) path")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every model input, plus the
+matching NamedShardings — weak-type-correct, shardable, zero allocation.
+
+One function per assigned shape kind:
+  train_4k    -> (params, opt_state, batch)                for train_step
+  prefill_32k -> (params, batch)                           for prefill_step
+  decode_32k / long_500k -> (params, tokens, cache, lens)  for serve_step
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import transformer as T
+from repro.models.params import abstract_params, shardings_for
+from repro.optim.adafactor import adafactor_state_defs
+from repro.sharding.axes import logical_sharding
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int, mesh: Mesh,
+                labels: bool = True) -> Tuple[Dict, Dict]:
+    """Token batch ShapeDtypeStructs + shardings for one full-seq pass."""
+    specs, shards = {}, {}
+
+    def add(name, shape, dtype, axes):
+        specs[name] = _sds(shape, dtype)
+        shards[name] = logical_sharding(shape, axes, mesh)
+
+    if cfg.family == "vlm":
+        s_text = seq - cfg.num_patches
+        add("tokens", (batch, s_text), "int32", ("batch", "seq"))
+        if labels:
+            add("labels", (batch, s_text), "int32", ("batch", "seq"))
+        add("patch_embeds", (batch, cfg.num_patches, cfg.d_model),
+            cfg.dtype, ("batch", "seq", "d_model"))
+    else:
+        add("tokens", (batch, seq), "int32", ("batch", "seq"))
+        if labels:
+            add("labels", (batch, seq), "int32", ("batch", "seq"))
+    if cfg.family == "encdec":
+        add("frame_embeds", (batch, cfg.encoder_seq, cfg.d_model),
+            cfg.dtype, ("batch", "seq", "d_model"))
+    return specs, shards
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh):
+    defs = T.param_defs(cfg)
+    return abstract_params(defs), shardings_for(defs, mesh)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh):
+    sdefs = adafactor_state_defs(T.param_defs(cfg))
+    return abstract_params(sdefs), shardings_for(sdefs, mesh)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, mesh: Mesh):
+    cdefs = T.cache_defs(cfg, batch, max_len)
+    return abstract_params(cdefs), shardings_for(cdefs, mesh)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> dict:
+    """Everything the shape's step function needs, as (abstract, shardings).
+    Returns {"args": tuple_of_abstract, "shardings": tuple, "kind": str}."""
+    p_abs, p_sh = param_specs(cfg, mesh)
+    if shape.kind == "train":
+        o_abs, o_sh = opt_specs(cfg, mesh)
+        b_abs, b_sh = batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                  mesh, labels=True)
+        return {"kind": "train",
+                "args": (p_abs, o_abs, b_abs),
+                "shardings": (p_sh, o_sh, b_sh)}
+    if shape.kind == "prefill":
+        b_abs, b_sh = batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                  mesh, labels=False)
+        return {"kind": "prefill",
+                "args": (p_abs, b_abs),
+                "shardings": (p_sh, b_sh)}
+    # decode: one new token against a cache of shape.seq_len
+    B = shape.global_batch
+    c_abs, c_sh = cache_specs(cfg, B, shape.seq_len, mesh)
+    tok = _sds((B, 1), "int32")
+    tok_sh = logical_sharding((B, 1), ("batch", None), mesh)
+    lens = _sds((B,), "int32")
+    lens_sh = logical_sharding((B,), ("batch",), mesh)
+    return {"kind": "decode",
+            "args": (p_abs, tok, c_abs, lens),
+            "shardings": (p_sh, tok_sh, c_sh, lens_sh)}

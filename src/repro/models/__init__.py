@@ -1,0 +1,4 @@
+from repro.models import transformer
+from repro.models.params import ParamDef, init_params, abstract_params, shardings_for
+
+__all__ = ["transformer", "ParamDef", "init_params", "abstract_params", "shardings_for"]

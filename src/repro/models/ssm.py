@@ -1,0 +1,287 @@
+"""Recurrent mixers: RWKV6 (Finch) time/channel mix and Mamba selective SSM.
+
+Both are linear recurrences h_t = a_t * h_{t-1} + b_t with elementwise decay,
+evaluated by a *chunked associative scan*: lax.scan over chunks (carrying the
+state) with lax.associative_scan inside each chunk. This keeps HLO size O(1),
+peak memory O(B*chunk*state), and is numerically safe (decays in (0,1], only
+products — no divisions by cumulative decay).
+
+The MXU-friendly matmul ("chunked linear attention") form is the Pallas
+kernel's job (kernels/rwkv_chunk.py); this module is the XLA/oracle path.
+
+RWKV6 faithfulness notes (DESIGN.md §7): data-dependent decay w_t =
+exp(-exp(w0 + lora(x))) is implemented (the defining Finch feature); the
+ddlerp token-shift interpolation uses static per-channel mix coefficients
+(the low-rank data-dependent part of the *interpolator* is dropped — decay
+keeps its data dependence).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+from repro.sharding.axes import constrain
+
+# --------------------------------------------------------------------------- #
+# chunked elementwise-decay linear scan
+# --------------------------------------------------------------------------- #
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, b1 * a2 + b2
+
+
+def chunked_linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+                        chunk: int):
+    """h_t = a_t * h_{t-1} + b_t (elementwise, any trailing state dims).
+
+    a, b: (T, ...state); h0: (...state).
+    Returns (h_all (T, ...state) inclusive states, h_final).
+    """
+    T = a.shape[0]
+    c = min(chunk, T)
+    assert T % c == 0, (T, c)
+    nc = T // c
+    a_c = a.reshape((nc, c) + a.shape[1:])
+    b_c = b.reshape((nc, c) + b.shape[1:])
+
+    def body(h, ab):
+        ac, bc = ab
+        A, Bc = jax.lax.associative_scan(_combine, (ac, bc), axis=0)
+        h_all = A * h + Bc                       # inclusive within chunk
+        return h_all[-1], h_all
+
+    h_fin, h_chunks = jax.lax.scan(body, h0, (a_c, b_c))
+    return h_chunks.reshape((T,) + a.shape[1:]), h_fin
+
+
+# =========================================================================== #
+# RWKV6 (Finch)
+# =========================================================================== #
+def rwkv_defs(cfg: ModelConfig, stacked: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    H, hd = cfg.num_heads, cfg.rwkv_head_dim
+    r = max(32, d // 64)  # decay-lora rank
+    lead = () if stacked is None else (stacked,)
+    la = () if stacked is None else ("layers",)
+
+    def pd(shape, axes, init="normal", scale=1.0):
+        return ParamDef(lead + shape, la + axes, init, scale)
+
+    return {
+        # time-mix interpolation coefficients (static ddlerp part)
+        "mu_r": pd((d,), ("d_model",), "zeros"),
+        "mu_k": pd((d,), ("d_model",), "zeros"),
+        "mu_v": pd((d,), ("d_model",), "zeros"),
+        "mu_g": pd((d,), ("d_model",), "zeros"),
+        "mu_w": pd((d,), ("d_model",), "zeros"),
+        # projections
+        "wr": pd((d, H, hd), ("d_model", "rwkv_heads", "head_dim")),
+        "wk": pd((d, H, hd), ("d_model", "rwkv_heads", "head_dim")),
+        "wv": pd((d, H, hd), ("d_model", "rwkv_heads", "head_dim")),
+        "wg": pd((d, H, hd), ("d_model", "rwkv_heads", "head_dim")),
+        "wo": pd((H, hd, d), ("rwkv_heads", "head_dim", "d_model")),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": pd((H, hd), ("rwkv_heads", "head_dim"), "decay"),
+        "w_lora_a": pd((d, r), ("d_model", None), "small_normal"),
+        "w_lora_b": pd((r, H, hd), (None, "rwkv_heads", "head_dim"), "zeros"),
+        # bonus
+        "u": pd((H, hd), ("rwkv_heads", "head_dim"), "small_normal"),
+        # per-head group norm on the wkv output
+        "ln_scale": pd((H, hd), ("rwkv_heads", "head_dim"), "ones"),
+        "ln_bias": pd((H, hd), ("rwkv_heads", "head_dim"), "zeros"),
+        # channel mix
+        "mu_ck": pd((d,), ("d_model",), "zeros"),
+        "mu_cr": pd((d,), ("d_model",), "zeros"),
+        "wck": pd((d, f), ("d_model", "d_ff")),
+        "wcv": pd((f, d), ("d_ff", "d_model")),
+        "wcr": pd((d, d), ("d_model", None)),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_prev[t] = x[t-1]; position 0 takes `prev` (decode carry) or zeros."""
+    B, T, d = x.shape
+    first = jnp.zeros((B, 1, d), x.dtype) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _wkv_scan(r, k, v, w, u, s0, chunk):
+    """r,k,v,w: (B, H, T, hd); u: (H, hd); s0: (B, H, hd, hd) [k-major].
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T.
+    Returns (y (B,H,T,hd), s_final)."""
+    B, H, T, hd = r.shape
+    # move time leading for the scan: (T, B, H, ...)
+    rt = jnp.moveaxis(r, 2, 0).astype(jnp.float32)
+    kt = jnp.moveaxis(k, 2, 0).astype(jnp.float32)
+    vt = jnp.moveaxis(v, 2, 0).astype(jnp.float32)
+    wt = jnp.moveaxis(w, 2, 0).astype(jnp.float32)
+
+    a = wt[..., None]                                      # (T,B,H,hd_k,1)
+    b = kt[..., None] * vt[..., None, :]                   # (T,B,H,hd_k,hd_v)
+    a = jnp.broadcast_to(a, b.shape)
+    s_all, s_fin = chunked_linear_scan(a, b, s0.astype(jnp.float32), chunk)
+    # exclusive state S_{t-1}
+    s_prev = jnp.concatenate([s0.astype(jnp.float32)[None], s_all[:-1]], axis=0)
+    bonus = (u.astype(jnp.float32)[None, None] * kt)       # (T,B,H,hd_k)
+    y = jnp.einsum("tbhk,tbhkv->tbhv", rt, s_prev) \
+        + jnp.einsum("tbhk,tbhk,tbhv->tbhv", rt, bonus, vt)
+    return jnp.moveaxis(y, 0, 2), s_fin                    # (B,H,T,hd)
+
+
+def _group_norm(y: jax.Array, scale, bias) -> jax.Array:
+    """Per-head LayerNorm of the wkv output (paper: RWKV ln_x)."""
+    yf = y.astype(jnp.float32)
+    mean = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mean) * jax.lax.rsqrt(var + 1e-5)
+    return yn * scale.astype(jnp.float32)[None, :, None, :] \
+              + bias.astype(jnp.float32)[None, :, None, :]
+
+
+def rwkv_time_mix(cfg: ModelConfig, p: dict, x: jax.Array,
+                  state: Optional[dict] = None):
+    """x: (B, T, d). state (decode): {"shift": (B,d), "wkv": (B,H,hd,hd)}.
+    Returns (out, new_state)."""
+    B, T, d = x.shape
+    H, hd = cfg.num_heads, cfg.rwkv_head_dim
+    prev = None if state is None else state["shift_tm"]
+    xp = _token_shift(x, prev)
+
+    def proj(mu, w):
+        xm = _ddlerp(x, xp, mu)
+        return jnp.einsum("btd,dhk->bhtk", xm, w)
+
+    r = proj(p["mu_r"], p["wr"])
+    k = proj(p["mu_k"], p["wk"])
+    v = proj(p["mu_v"], p["wv"])
+    g = proj(p["mu_g"], p["wg"])
+    r = constrain(r, ("batch", "rwkv_heads", "seq", "head_dim"))
+
+    # data-dependent decay (the Finch contribution)
+    xw = _ddlerp(x, xp, p["mu_w"])
+    dd = jnp.einsum("rhk,btr->bthk",
+                    p["w_lora_b"].astype(jnp.float32),
+                    jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w_lora_a"])
+                             .astype(jnp.float32)))
+    logw = p["w0"].astype(jnp.float32)[None, None] + dd    # (B,T,H,hd)
+    w = jnp.exp(-jnp.exp(jnp.clip(logw, -10.0, 4.0)))      # decay in (0,1)
+    w = jnp.moveaxis(w, 1, 2)                              # (B,H,T,hd)
+
+    s0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None
+          else state["wkv"])
+    y, s_fin = _wkv_scan(r, k, v, w, p["u"], s0, cfg.ssm_chunk)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"])
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    out = jnp.einsum("bhtk,hkd->btd", y, p["wo"])
+    out = constrain(out, ("batch", "seq", "d_model"))
+    new_state = {"shift_tm": x[:, -1, :], "wkv": s_fin}
+    return out, new_state
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p: dict, x: jax.Array,
+                     state: Optional[dict] = None):
+    prev = None if state is None else state["shift_cm"]
+    xp = _token_shift(x, prev)
+    xk = _ddlerp(x, xp, p["mu_ck"])
+    xr = _ddlerp(x, xp, p["mu_cr"])
+    k = jnp.einsum("btd,df->btf", xk, p["wck"])
+    k = jnp.square(jax.nn.relu(k))
+    k = constrain(k, ("batch", "seq", "d_ff"))
+    v = jnp.einsum("btf,fd->btd", k, p["wcv"])
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wcr"]))
+    out = constrain(r * v, ("batch", "seq", "d_model"))
+    return out, {"shift_cm": x[:, -1, :]}
+
+
+# =========================================================================== #
+# Mamba (selective SSM, as interleaved in Jamba)
+# =========================================================================== #
+def mamba_defs(cfg: ModelConfig, stacked: Optional[int] = None) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_d_state
+    r = max(16, d // 16)  # dt rank
+    cw = cfg.ssm_conv
+    lead = () if stacked is None else (stacked,)
+    la = () if stacked is None else ("layers",)
+
+    def pd(shape, axes, init="normal", scale=1.0):
+        return ParamDef(lead + shape, la + axes, init, scale)
+
+    return {
+        "in_proj_x": pd((d, di), ("d_model", "d_inner")),
+        "in_proj_z": pd((d, di), ("d_model", "d_inner")),
+        "conv_w": pd((cw, di), ("conv", "d_inner"), "normal", scale=2.0),
+        "conv_b": pd((di,), ("d_inner",), "zeros"),
+        "w_b": pd((di, n), ("d_inner", "d_state"), "small_normal"),
+        "w_c": pd((di, n), ("d_inner", "d_state"), "small_normal"),
+        "w_dt_in": pd((di, r), ("d_inner", None), "small_normal"),
+        "w_dt_out": pd((r, di), (None, "d_inner"), "small_normal"),
+        "dt_bias": pd((di,), ("d_inner",), "decay", scale=0.5),
+        "a_log": pd((di, n), ("d_inner", "d_state"), "decay", scale=-1.0),
+        "d_skip": pd((di,), ("d_inner",), "ones"),
+        "out_proj": pd((di, d), ("d_inner", "d_model")),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                           state: Optional[jax.Array]):
+    """x: (B, T, di); w: (cw, di). Causal width-cw depthwise conv as a sum of
+    shifted slices (SPMD-trivial). state (decode): (B, cw-1, di) history."""
+    cw = w.shape[0]
+    B, T, di = x.shape
+    hist = (jnp.zeros((B, cw - 1, di), x.dtype) if state is None else state)
+    xp = jnp.concatenate([hist, x], axis=1)                # (B, T+cw-1, di)
+    out = sum(xp[:, j:j + T, :] * w[j][None, None] for j in range(cw))
+    new_state = xp[:, T:, :] if cw > 1 else hist
+    return out + b[None, None], new_state
+
+
+def mamba_mix(cfg: ModelConfig, p: dict, x: jax.Array,
+              state: Optional[dict] = None):
+    """x: (B, T, d). state (decode): {"conv": (B,cw-1,di), "ssm": (B,di,n)}.
+    Returns (out (B,T,d), new_state)."""
+    B, T, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_d_state
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj_x"])
+    z = jnp.einsum("btd,de->bte", x, p["in_proj_z"])
+    xz = constrain(xz, ("batch", "seq", "d_inner"))
+
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_depthwise_conv(xz, p["conv_w"], p["conv_b"],
+                                          conv_state)
+    xc = jax.nn.silu(xc)
+
+    # selective parameters
+    dt = jnp.einsum("btr,re->bte",
+                    jnp.einsum("bte,er->btr", xc, p["w_dt_in"]),
+                    p["w_dt_out"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (B,T,di)
+    Bt = jnp.einsum("bte,en->btn", xc, p["w_b"]).astype(jnp.float32)
+    Ct = jnp.einsum("bte,en->btn", xc, p["w_c"]).astype(jnp.float32)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                # (di,n) < 0
+
+    a = jnp.exp(dt[..., None] * A[None, None])                  # (B,T,di,n)
+    u = (dt * xc.astype(jnp.float32))[..., None] * Bt[:, :, None, :]
+    a = jnp.moveaxis(a, 1, 0)                                   # (T,B,di,n)
+    u = jnp.moveaxis(u, 1, 0)
+
+    h0 = (jnp.zeros((B, di, n), jnp.float32) if state is None
+          else state["ssm"])
+    h_all, h_fin = chunked_linear_scan(a, u, h0, cfg.ssm_chunk)
+    y = jnp.einsum("tbdn,tbn->tbd", h_all, jnp.moveaxis(Ct, 1, 0))
+    y = jnp.moveaxis(y, 0, 1)                                   # (B,T,di)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    out = constrain(out, ("batch", "seq", "d_model"))
+    return out, {"conv": new_conv, "ssm": h_fin}

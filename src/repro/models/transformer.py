@@ -1,0 +1,408 @@
+"""The unified model: interprets every ModelConfig family.
+
+Layer stacking uses *superblocks*: the per-layer (mixer, ffn) kind sequence is
+periodic with period p (p=1 for homogeneous stacks, p=8 for Jamba's
+1-attention-per-8 + alternating-MoE layout). Parameters for position j in the
+superblock are stacked along a leading (num_layers/p) dim and the forward pass
+is a single lax.scan over superblocks — HLO stays O(p) regardless of depth,
+which is what makes the 61-layer / 1T-param dry-run compile tractable.
+
+Entry points:
+  param_defs / cache_defs     — ParamDef trees (init + sharding + dry-run specs)
+  forward_full                — train/prefill logits
+  loss_fn                     — LM loss (+ MoE aux)
+  decode_step                 — one-token generation step against the cache
+  encode / prefill_with_cache — serving-side helpers
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.sharding.axes import constrain
+
+
+# --------------------------------------------------------------------------- #
+# superblock structure
+# --------------------------------------------------------------------------- #
+def superblock_period(cfg: ModelConfig) -> int:
+    kinds = list(zip(cfg.layer_kinds(), cfg.ffn_kinds()))
+    L_ = len(kinds)
+    for p in range(1, L_ + 1):
+        if L_ % p == 0 and kinds == kinds[:p] * (L_ // p):
+            return p
+    return L_
+
+
+def _position_kinds(cfg: ModelConfig):
+    p = superblock_period(cfg)
+    return list(zip(cfg.layer_kinds()[:p], cfg.ffn_kinds()[:p]))
+
+
+# --------------------------------------------------------------------------- #
+# parameter defs
+# --------------------------------------------------------------------------- #
+def _block_defs(cfg: ModelConfig, mixer: str, ffn: str, n_super: int,
+                cross: bool = False) -> dict:
+    d = {}
+    d["norm1"] = L.norm_defs(cfg, stacked=n_super)
+    if mixer == "attn":
+        d["attn"] = A.attn_defs(cfg, stacked=n_super)
+        if cross:
+            d["norm_cross"] = L.norm_defs(cfg, stacked=n_super)
+            d["cross"] = A.attn_defs(cfg, stacked=n_super, cross=True)
+        d["norm2"] = L.norm_defs(cfg, stacked=n_super)
+        d["ffn"] = (M.moe_defs(cfg, stacked=n_super) if ffn == "moe"
+                    else L.mlp_defs(cfg, stacked=n_super))
+    elif mixer == "mamba":
+        d["mamba"] = S.mamba_defs(cfg, stacked=n_super)
+        d["norm2"] = L.norm_defs(cfg, stacked=n_super)
+        d["ffn"] = (M.moe_defs(cfg, stacked=n_super) if ffn == "moe"
+                    else L.mlp_defs(cfg, stacked=n_super))
+    elif mixer == "rwkv":
+        # rwkv: time-mix (mixer) + channel-mix (its own FFN); norm2 separates them
+        d["rwkv"] = S.rwkv_defs(cfg, stacked=n_super)
+        d["norm2"] = L.norm_defs(cfg, stacked=n_super)
+    else:
+        raise ValueError(mixer)
+    return d
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    p = superblock_period(cfg)
+    n_super = cfg.num_layers // p
+    defs: Dict[str, Any] = {"embed": L.embed_defs(cfg)}
+    cross = cfg.family == "encdec"
+    defs["blocks"] = {
+        f"pos{j}": _block_defs(cfg, mixer, ffn, n_super, cross=cross)
+        for j, (mixer, ffn) in enumerate(_position_kinds(cfg))
+    }
+    defs["final_norm"] = L.norm_defs(cfg)
+    if cfg.family == "encdec":
+        defs["encoder"] = {
+            "blocks": {
+                "pos0": _block_defs(cfg, "attn", "dense", cfg.encoder_layers)
+            },
+            "final_norm": L.norm_defs(cfg),
+        }
+    return defs
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decode-time state as a ParamDef tree (zeros init, logical axes drive
+    the sharded layout — kv_seq falls back to 'model' for narrow GQA)."""
+    p = superblock_period(cfg)
+    n_super = cfg.num_layers // p
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    out: Dict[str, Any] = {}
+    for j, (mixer, _ffn) in enumerate(_position_kinds(cfg)):
+        c: Dict[str, Any] = {}
+        if mixer == "attn":
+            shape = (n_super, batch, kh, max_len, hd)
+            axes = ("layers", "batch", "kv_heads", "kv_seq", "head_dim")
+            kv_dt = "int8" if cfg.kv_dtype == "int8" else cfg.dtype
+            c["k"] = ParamDef(shape, axes, "zeros", dtype=kv_dt)
+            c["v"] = ParamDef(shape, axes, "zeros", dtype=kv_dt)
+            if cfg.kv_dtype == "int8":
+                s_shape = (n_super, batch, kh, max_len)
+                s_axes = ("layers", "batch", "kv_heads", "kv_seq")
+                c["k_scale"] = ParamDef(s_shape, s_axes, "zeros",
+                                        dtype="float32")
+                c["v_scale"] = ParamDef(s_shape, s_axes, "zeros",
+                                        dtype="float32")
+            if cfg.family == "encdec":
+                xshape = (n_super, batch, kh, cfg.encoder_seq, hd)
+                xaxes = ("layers", "batch", "kv_heads", None, "head_dim")
+                c["ck"] = ParamDef(xshape, xaxes, "zeros", dtype=cfg.dtype)
+                c["cv"] = ParamDef(xshape, xaxes, "zeros", dtype=cfg.dtype)
+        elif mixer == "mamba":
+            c["conv"] = ParamDef((n_super, batch, cfg.ssm_conv - 1, cfg.d_inner),
+                                 ("layers", "batch", None, "d_inner"),
+                                 "zeros", dtype=cfg.dtype)
+            c["ssm"] = ParamDef((n_super, batch, cfg.d_inner, cfg.ssm_d_state),
+                                ("layers", "batch", "d_inner", "d_state"),
+                                "zeros", dtype="float32")
+        elif mixer == "rwkv":
+            c["wkv"] = ParamDef((n_super, batch, cfg.num_heads,
+                                 cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                                ("layers", "batch", "rwkv_heads",
+                                 "head_dim", None),
+                                "zeros", dtype="float32")
+            c["shift_tm"] = ParamDef((n_super, batch, cfg.d_model),
+                                     ("layers", "batch", "d_model"),
+                                     "zeros", dtype=cfg.dtype)
+            c["shift_cm"] = ParamDef((n_super, batch, cfg.d_model),
+                                     ("layers", "batch", "d_model"),
+                                     "zeros", dtype=cfg.dtype)
+        out[f"pos{j}"] = c
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# layer application
+# --------------------------------------------------------------------------- #
+def _apply_block_full(cfg: ModelConfig, kind: Tuple[str, str], p: dict,
+                      x: jax.Array, positions: jax.Array,
+                      enc_kv=None, causal: bool = True):
+    """Full-sequence (train/prefill) block. Returns (x, aux_loss)."""
+    mixer, ffn = kind
+    aux = jnp.zeros((), jnp.float32)
+    if mixer == "attn":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        x = x + A.attention_prefill(cfg, p["attn"], h, positions, causal=causal)
+        if enc_kv is not None:
+            h = L.apply_norm(cfg, p["norm_cross"], x)
+            x = x + A.cross_attention(cfg, p["cross"], h, enc_kv)
+        h = L.apply_norm(cfg, p["norm2"], x)
+        if ffn == "moe":
+            y, aux = M.apply_moe(cfg, p["ffn"], h)
+        else:
+            y = L.apply_mlp(cfg, p["ffn"], h)
+        x = x + y
+    elif mixer == "mamba":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        y, _ = S.mamba_mix(cfg, p["mamba"], h)
+        x = x + y
+        h = L.apply_norm(cfg, p["norm2"], x)
+        if ffn == "moe":
+            y, aux = M.apply_moe(cfg, p["ffn"], h)
+        else:
+            y = L.apply_mlp(cfg, p["ffn"], h)
+        x = x + y
+    else:  # rwkv
+        h = L.apply_norm(cfg, p["norm1"], x)
+        y, _ = S.rwkv_time_mix(cfg, p["rwkv"], h)
+        x = x + y
+        h = L.apply_norm(cfg, p["norm2"], x)
+        y, _ = S.rwkv_channel_mix(cfg, p["rwkv"], h)
+        x = x + y
+    return constrain(x, ("batch", "seq", "d_model")), aux
+
+
+def _apply_block_decode(cfg: ModelConfig, kind: Tuple[str, str], p: dict,
+                        x: jax.Array, cache: dict, cur_len: jax.Array):
+    """One-token block. x: (B,1,d). Returns (x, new_cache)."""
+    mixer, ffn = kind
+    new_cache = dict(cache)
+    if mixer == "attn":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        kv_in = {k: cache[k] for k in ("k", "v", "k_scale", "v_scale")
+                 if k in cache}
+        y, kv = A.attention_decode(cfg, p["attn"], h, kv_in, cur_len)
+        new_cache.update(kv)
+        x = x + y
+        if "ck" in cache:
+            h = L.apply_norm(cfg, p["norm_cross"], x)
+            x = x + A.cross_attention(cfg, p["cross"], h,
+                                      (cache["ck"], cache["cv"]))
+        h = L.apply_norm(cfg, p["norm2"], x)
+        if ffn == "moe":
+            y, _ = M.apply_moe(cfg, p["ffn"], h)
+        else:
+            y = L.apply_mlp(cfg, p["ffn"], h)
+        x = x + y
+    elif mixer == "mamba":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        y, st = S.mamba_mix(cfg, p["mamba"], h,
+                            state={"conv": cache["conv"], "ssm": cache["ssm"]})
+        new_cache["conv"], new_cache["ssm"] = st["conv"], st["ssm"]
+        x = x + y
+        h = L.apply_norm(cfg, p["norm2"], x)
+        if ffn == "moe":
+            y, _ = M.apply_moe(cfg, p["ffn"], h)
+        else:
+            y = L.apply_mlp(cfg, p["ffn"], h)
+        x = x + y
+    else:  # rwkv
+        h = L.apply_norm(cfg, p["norm1"], x)
+        y, st = S.rwkv_time_mix(cfg, p["rwkv"], h,
+                                state={"shift_tm": cache["shift_tm"],
+                                       "wkv": cache["wkv"]})
+        new_cache["shift_tm"], new_cache["wkv"] = st["shift_tm"], st["wkv"]
+        x = x + y
+        h = L.apply_norm(cfg, p["norm2"], x)
+        y, st = S.rwkv_channel_mix(cfg, p["rwkv"], h,
+                                   state={"shift_cm": cache["shift_cm"]})
+        new_cache["shift_cm"] = st["shift_cm"]
+        x = x + y
+    return x, new_cache
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full": save only block boundaries
+
+
+# --------------------------------------------------------------------------- #
+# encoder (whisper)
+# --------------------------------------------------------------------------- #
+def _loop_blocks(cfg: ModelConfig, body, carry, xs):
+    """lax.scan over stacked blocks, or an unrolled python loop when
+    cfg.scan_layers=False (used by the dry-run cost compiles: XLA's
+    cost_analysis counts while bodies once regardless of trip count, so the
+    cost-extraction path unrolls; the proof/production path scans)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(_remat(cfg, body), carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        sl = jax.tree.map(lambda l: l[i], xs)
+        carry, y = _remat(cfg, body)(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def encode(cfg: ModelConfig, params: dict, frame_embeds: jax.Array) -> jax.Array:
+    """frame_embeds: (B, S_enc, d) stub frontend output -> encoder states."""
+    x = frame_embeds
+    Spos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+    kinds = ("attn", "dense")
+
+    def body(x, blk):
+        y, _ = _apply_block_full(cfg, kinds, blk, x, Spos, causal=False)
+        return y, None
+
+    x, _ = _loop_blocks(cfg, body, x, params["encoder"]["blocks"]["pos0"])
+    return L.apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+
+# --------------------------------------------------------------------------- #
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------- #
+def forward_full(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+                 patch_embeds: Optional[jax.Array] = None,
+                 frame_embeds: Optional[jax.Array] = None,
+                 last_only: bool = False):
+    """Returns (logits (B,S,V), aux_loss). For vlm, `tokens` covers the text
+    part; patch embeddings are prepended so S_total = P + S_text.
+    last_only=True emits only the final position's logits (serving prefill:
+    a (B, S, vocab) tensor at 32k x 131k vocab would be hundreds of TB)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg.d_model)
+    if cfg.family == "vlm":
+        assert patch_embeds is not None
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+        x = constrain(x, ("batch", "seq", "d_model"))
+    B, Stot = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Stot)[None], (B, Stot))
+
+    enc_kv_per_pos = None
+    if cfg.family == "encdec":
+        assert frame_embeds is not None
+        enc_out = encode(cfg, params, frame_embeds)
+    kinds = _position_kinds(cfg)
+
+    def body(carry, blk):
+        x, aux = carry
+        for j, kind in enumerate(kinds):
+            p = blk[f"pos{j}"]
+            ekv = None
+            if cfg.family == "encdec" and kind[0] == "attn":
+                ekv = A.encoder_kv(cfg, p["cross"], enc_out)
+            x, a = _apply_block_full(cfg, kind, p, x, positions, enc_kv=ekv)
+            aux = aux + a
+        return (x, aux), None
+
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    (x, aux), _ = _loop_blocks(cfg, body, carry0, params["blocks"])
+    if last_only:
+        x = x[:, -1:, :]
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(params["embed"], x, cfg.tie_embeddings)
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    """batch: tokens (B,S[,_]), labels (B,S), optional loss_mask, plus the
+    family-specific stub inputs. Returns (loss, metrics)."""
+    logits, aux = forward_full(
+        cfg, params, batch["tokens"],
+        patch_embeds=batch.get("patch_embeds"),
+        frame_embeds=batch.get("frame_embeds"))
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if cfg.family == "vlm":
+        # logits cover [patches; text]; loss only over text positions
+        P = cfg.num_patches
+        logits = logits[:, P:, :]
+    nll = L.softmax_xent(logits, labels, mask)
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# decode step (generation stage)
+# --------------------------------------------------------------------------- #
+def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                cache: dict, cur_len: jax.Array):
+    """tokens: (B, 1) int32; cur_len: (B,) current context lengths.
+    Returns (logits (B, V), new_cache)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg.d_model)
+    kinds = _position_kinds(cfg)
+
+    def body(x, xs):
+        blk, cache_slice = xs
+        new_slice = {}
+        for j, kind in enumerate(kinds):
+            x, nc = _apply_block_decode(cfg, kind, blk[f"pos{j}"], x,
+                                        cache_slice[f"pos{j}"], cur_len)
+            new_slice[f"pos{j}"] = nc
+        return x, new_slice
+
+    x, new_cache = _loop_blocks(cfg, body, x, (params["blocks"], cache))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(params["embed"], x, cfg.tie_embeddings)
+    return logits[:, 0, :], new_cache
+
+
+# --------------------------------------------------------------------------- #
+# prefill that also fills the cache (serving path; not the dry-run prefill)
+# --------------------------------------------------------------------------- #
+def prefill_with_cache(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                       cache: dict, *, patch_embeds=None, frame_embeds=None):
+    """Sequential prefill via decode_step (teacher-forced). Serving uses this
+    for short prompts; large-context prefill would use a fused kernel. Returns
+    (last_logits, cache, lengths)."""
+    B, S = tokens.shape
+    if cfg.family == "encdec" and frame_embeds is not None:
+        enc_out = encode(cfg, params, frame_embeds)
+        kinds = _position_kinds(cfg)
+        # fill cross-attention K/V once per layer
+        pos_cross = {}
+        for j, kind in enumerate(kinds):
+            if kind[0] != "attn":
+                continue
+            blk = params["blocks"][f"pos{j}"]
+            def per_layer(cp):
+                return A.encoder_kv(cfg, cp, enc_out)
+            ck, cv = jax.vmap(per_layer)(blk["cross"])
+            pos_cross[f"pos{j}"] = (ck, cv)
+        for name, (ck, cv) in pos_cross.items():
+            cache[name] = dict(cache[name], ck=ck, cv=cv)
+
+    def step(carry, t):
+        cache, lens, _ = carry
+        logits, cache = decode_step(cfg, params, tokens[:, t][:, None],
+                                    cache, lens)
+        return (cache, lens + 1, logits.astype(jnp.float32)), None
+
+    carry0 = (cache, jnp.zeros((B,), jnp.int32), jnp.zeros(
+        (B, cfg.vocab_size), jnp.float32))
+    (cache, lens, logits), _ = jax.lax.scan(step, carry0, jnp.arange(S))
+    return logits, cache, lens

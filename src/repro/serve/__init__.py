@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeConfig, ServeEngine, Request
+
+__all__ = ["ServeConfig", "ServeEngine", "Request"]

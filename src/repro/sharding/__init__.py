@@ -1,0 +1,17 @@
+from repro.sharding.axes import (
+    LOGICAL_RULES,
+    MeshInfo,
+    logical_spec,
+    logical_sharding,
+    constrain,
+    param_sharding_tree,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "MeshInfo",
+    "logical_spec",
+    "logical_sharding",
+    "constrain",
+    "param_sharding_tree",
+]

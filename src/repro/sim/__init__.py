@@ -1,0 +1,4 @@
+from repro.sim.engine import SimConfig, SimResult, Simulator
+from repro.sim import graphs, baselines, energy
+
+__all__ = ["SimConfig", "SimResult", "Simulator", "graphs", "baselines", "energy"]

@@ -1,0 +1,106 @@
+"""Baseline device models: A100 GPU, DFX (4-FPGA appliance), NPU-MEM.
+
+A100 and DFX are analytic roofline-plus-overhead models *calibrated against
+the paper's own reported measurements* (they cannot be re-measured in this
+container); NPU-MEM reuses our discrete-event simulator with the PIM
+disabled (exactly the paper's ablation). Calibration anchors:
+
+  A100: 29.9 ms/token for GPT-2 2.5B generation (§6.2); Fig. 2 latency
+        structure (generation of 2 tokens = 88.5% of a 512-token
+        summarization; LN+residual 13.2%; self-attn 41.4% with 66.1%
+        non-compute).
+  DFX:  6.9 ms/token for GPT-2 XL (64,256) (§6.2); appliance peak
+        1.64 TFLOPS / 1840 GB/s HBM2 (Table 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+
+
+def _gpt_layer_weights(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    return (d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+            + 2 * d * cfg.d_ff)
+
+
+def _model_weight_bytes(cfg: ModelConfig, bpe: int = 2) -> int:
+    return cfg.num_layers * _gpt_layer_weights(cfg) * bpe \
+        + cfg.vocab_size * cfg.d_model * bpe
+
+
+# --------------------------------------------------------------------------- #
+# A100
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class A100Model:
+    peak_flops: float = 255e12        # Table 2 (as reported)
+    hbm_bw: float = 2039e9
+    mem_eff: float = 0.65             # achieved HBM fraction, unbatched GEMV
+    flop_eff: float = 0.45            # achieved matmul fraction, short seqs
+    kernel_overhead: float = 15e-6    # per-kernel launch+sync (HF/Megatron,
+                                      # batch 1 — calibrated to 29.9 ms/token)
+    kernels_per_layer: int = 32       # incl. split/merge/transpose/concat
+    enc_kernels_per_layer: int = 20   # encoder-only (no KV/generation ops)
+    attn_manip_factor: float = 2.0    # non-compute data reordering multiplier
+
+    def summarization(self, cfg: ModelConfig, n: int,
+                      encoder_only: bool = False) -> float:
+        wbytes = _model_weight_bytes(cfg)
+        flops = 2.0 * n * (_model_weight_bytes(cfg) // 2) \
+            + 4.0 * n * n * cfg.d_model * cfg.num_layers   # attention
+        t_compute = flops / (self.peak_flops * self.flop_eff)
+        t_mem = wbytes / (self.hbm_bw * self.mem_eff)
+        kpl = self.enc_kernels_per_layer if encoder_only \
+            else self.kernels_per_layer
+        t_launch = cfg.num_layers * kpl * self.kernel_overhead
+        return max(t_compute, t_mem) + t_launch
+
+    def generation_step(self, cfg: ModelConfig, kv_len: int) -> float:
+        wbytes = _model_weight_bytes(cfg)
+        kv_bytes = 2 * kv_len * cfg.kv_dim * 2 * cfg.num_layers
+        t_mem = (wbytes + kv_bytes) / (self.hbm_bw * self.mem_eff)
+        t_launch = cfg.num_layers * self.kernels_per_layer \
+            * self.kernel_overhead * self.attn_manip_factor / 2.0
+        return t_mem + t_launch
+
+    def e2e(self, cfg: ModelConfig, n_in: int, n_out: int) -> dict:
+        s = self.summarization(cfg, n_in)
+        g = 0.0
+        for i in range(n_out):
+            g += self.generation_step(cfg, n_in + i + 1)
+        return {"total": s + g, "summarization": s, "generation": g}
+
+
+# --------------------------------------------------------------------------- #
+# DFX
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class DFXModel:
+    peak_flops: float = 1.64e12       # appliance-level (matched to HBM bw)
+    hbm_bw: float = 1840e9            # 4 FPGAs aggregate
+    mem_eff: float = 0.236            # calibrated: XL token = 6.9 ms
+    flop_eff: float = 0.85            # bandwidth-matched design point
+    layer_overhead: float = 4e-6
+
+    def summarization(self, cfg: ModelConfig, n: int) -> float:
+        """DFX is a single-token generation pipeline: input tokens stream
+        through sequentially (this is what makes IANUS 49.3x faster at
+        (128,1) — 128 x per-token GEMV time vs one batched GEMM pass)."""
+        return sum(self.generation_step(cfg, i + 1) for i in range(n))
+
+    def generation_step(self, cfg: ModelConfig, kv_len: int) -> float:
+        wbytes = _model_weight_bytes(cfg)
+        kv_bytes = 2 * kv_len * cfg.kv_dim * 2 * cfg.num_layers
+        return (wbytes + kv_bytes) / (self.hbm_bw * self.mem_eff) \
+            + cfg.num_layers * self.layer_overhead
+
+    def e2e(self, cfg: ModelConfig, n_in: int, n_out: int) -> dict:
+        s = self.summarization(cfg, n_in)
+        g = sum(self.generation_step(cfg, n_in + i + 1) for i in range(n_out))
+        return {"total": s + g, "summarization": s, "generation": g}
+
+
+A100 = A100Model()
+DFX = DFXModel()

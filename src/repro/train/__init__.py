@@ -1,0 +1,4 @@
+from repro.train.step import TrainStepConfig, make_train_step
+from repro.train import compression
+
+__all__ = ["TrainStepConfig", "make_train_step", "compression"]

@@ -1,0 +1,13 @@
+import os
+
+# smoke tests and benches see the single real CPU device; ONLY the dry-run
+# sets xla_force_host_platform_device_count (in its own subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
