@@ -1,0 +1,94 @@
+"""Prefill throughput: sequential teacher-forced vs batched flash prefill.
+
+The paper's summarization stage is compute-bound and belongs on the batched
+GEMM path; the seed engine ran it through the generation path (one decode
+dispatch + host sync per prompt token). This measures the difference on the
+serving engine itself:
+
+    PYTHONPATH=src python benchmarks/serve_prefill.py
+    PYTHONPATH=src python benchmarks/serve_prefill.py --seq 128 --slots 8
+
+Prints prefill tokens/sec for both modes, the speedup, and the dispatch
+counts (B slots x S tokens must cost ceil(S/chunk) batched dispatches vs
+B*(S-1) sequential ones).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serve import ServeConfig, ServeEngine
+
+
+def time_prefill(cfg, params, mode, *, slots, seq, chunk, max_len, iters):
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, seq).astype(np.int32)
+               for _ in range(slots)]
+
+    def run():
+        eng = ServeEngine(cfg, params,
+                          ServeConfig(max_slots=slots, max_len=max_len,
+                                      prefill_mode=mode,
+                                      prefill_chunk=chunk))
+        for p in prompts:
+            eng.add_request(p, max_new_tokens=1)
+        t0 = time.perf_counter()
+        eng._admit()
+        jax.block_until_ready(eng.cache)
+        return time.perf_counter() - t0, eng.dispatch_counts["prefill"]
+
+    run()                                    # warmup (compiles)
+    times = []
+    for _ in range(iters):
+        dt, dispatches = run()
+        times.append(dt)
+    tokens = slots * (seq - 1)               # prompt[:-1] is prefilled
+    best = min(times)
+    return tokens / best, dispatches
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (default: .reduced() smoke dims)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=65,
+                    help="prompt length per slot")
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
+
+    print(f"[prefill-bench] arch={cfg.name} slots={args.slots} "
+          f"prompt={args.seq} chunk={args.chunk}")
+    rows = {}
+    for mode in ("sequential", "batched"):
+        tps, dispatches = time_prefill(
+            cfg, params, mode, slots=args.slots, seq=args.seq,
+            chunk=args.chunk, max_len=args.max_len, iters=args.iters)
+        rows[mode] = tps
+        print(f"[prefill-bench] {mode:>10}: {tps:10.1f} prefill tok/s "
+              f"({dispatches} dispatches)")
+    speedup = rows["batched"] / rows["sequential"]
+    print(f"[prefill-bench] speedup: {speedup:.1f}x")
+    return speedup
+
+
+if __name__ == "__main__":
+    main()

@@ -25,17 +25,28 @@ from repro.serve import ServeConfig, ServeEngine
 def main():
     cfg = get_arch("llama3.2-1b").reduced()
     params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, ServeConfig(max_slots=4, max_len=96))
+    eng = ServeEngine(cfg, params, ServeConfig(max_slots=4, max_len=96,
+                                               prefill_chunk=16))
 
     rng = np.random.default_rng(0)
     for i in range(10):
-        eng.add_request(rng.integers(0, cfg.vocab_size, rng.integers(2, 8)),
+        eng.add_request(rng.integers(0, cfg.vocab_size, rng.integers(2, 32)),
                         max_new_tokens=12)
     results = eng.run_until_done()
     print(f"served {len(results)} requests, "
           f"{sum(map(len, results.values()))} tokens")
-    gemv = sum(e["gemv_path"] for e in eng.pas_log)
-    print(f"PAS: {gemv}/{len(eng.pas_log)} decode steps took the "
+    print(f"dispatches: {eng.dispatch_counts['prefill']} batched-prefill, "
+          f"{eng.dispatch_counts['decode']} decode")
+    # the paper's two phases, live from the engine's PAS log: summarization
+    # (batched prompt chunks) routes GEMM, generation (small active batch)
+    # routes GEMV — Algorithm 1 picks per phase, not per model
+    print(f"{'phase':>14} {'tokens':>7} {'ffn_route':>10} {'gemv_path':>10}")
+    for e in eng.pas_log[:8]:
+        print(f"{e['phase']:>14} {e['tokens']:>7} {e['ffn_route']:>10} "
+              f"{str(e['gemv_path']):>10}")
+    gen = [e for e in eng.pas_log if e["phase"] == "generation"]
+    gemv = sum(e["gemv_path"] for e in gen)
+    print(f"...\nPAS: {gemv}/{len(gen)} generation steps took the "
           f"GEMV (PIM-analogue) path\n")
 
     # the Algorithm-1 crossover, on real model dims (llama3.2-1b FFN)

@@ -1,0 +1,34 @@
+"""Cross-version jax API shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed its replication-check kwarg ``check_rep`` -> ``check_vma`` along
+the way. Call sites import from here and always use the new-style
+``check_vma`` keyword; the shim translates for older jax (0.4.x).
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level export, check_vma kwarg
+    from jax import shard_map as _shard_map
+    _NEW_API = True
+except ImportError:  # jax 0.4.x: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NEW_API = False
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` with Auto axis_types on new jax; plain make_mesh on
+    0.4.x, where the kwarg (and explicit-sharding axis types) don't exist."""
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs.setdefault(
+            "axis_types", (jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if _NEW_API:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

@@ -21,6 +21,7 @@ from repro.core.pas import (
     adaptive_map,
     decide_qk_sv_unit,
     decode_uses_gemv,
+    phase_log_entry,
     route_fc_tpu,
     MU, VU, PIM, DMA,
 )
@@ -37,7 +38,8 @@ __all__ = [
     "FCConfig", "HardwareModel", "IANUS_HW", "NPU_MEM_HW", "TPU_V5E",
     "TPU_ICI_BW", "RooflineTerms", "roofline",
     "Command", "MappingDecision", "PASPolicy", "adaptive_map",
-    "decide_qk_sv_unit", "decode_uses_gemv", "route_fc_tpu",
+    "decide_qk_sv_unit", "decode_uses_gemv", "phase_log_entry",
+    "route_fc_tpu",
     "MU", "VU", "PIM", "DMA",
     "AddressMap", "MemoryPlan", "WeightTiler",
     "partitioned_plan", "shared_fraction", "unified_plan",

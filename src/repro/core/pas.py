@@ -172,6 +172,25 @@ def decode_uses_gemv(batch_per_device: int, hw: HardwareModel = TPU_V5E) -> bool
     return batch_per_device < hw.mu_token_parallel
 
 
+def phase_log_entry(phase: str, n_tokens: int, active: int,
+                    d_model: int, d_ff: int,
+                    hw: HardwareModel = TPU_V5E) -> dict:
+    """One serving-step record for the engine's PAS log.
+
+    ``phase`` is "summarization" (batched prefill: n_tokens = prompt tokens
+    in the dispatch) or "generation" (decode: n_tokens = active slots).
+    The routing decision is per-phase — the paper's core observation is that
+    the two phases land on opposite sides of the GEMM/GEMV crossover."""
+    n = max(n_tokens, 1)
+    return {
+        "phase": phase,
+        "tokens": n_tokens,
+        "active": active,
+        "gemv_path": decode_uses_gemv(n, hw),
+        "ffn_route": route_fc_tpu(n, d_model, d_ff, hw),
+    }
+
+
 # --------------------------------------------------------------------------- #
 # Schedule policy record (consumed by the simulator)
 # --------------------------------------------------------------------------- #

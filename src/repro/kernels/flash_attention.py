@@ -25,7 +25,7 @@ NEG_INF = -1e30
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
             scale: float, causal: bool, block_q: int, block_kv: int,
-            n_kv: int):
+            n_kv: int, q_offset: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -35,7 +35,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    run = (not causal) or (ki * block_kv <= qi * block_q + block_q - 1)
+    run = (not causal) or \
+        (ki * block_kv <= q_offset + qi * block_q + block_q - 1)
 
     @pl.when(run)
     def _body():
@@ -45,7 +46,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         if causal:
-            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_kv), 0)
             kv_pos = ki * block_kv + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_kv), 1)
@@ -69,13 +70,20 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, block_q: int = 256,
-                    block_kv: int = 512, interpret: bool = False) -> jax.Array:
-    """q: (B, H, S, D); k, v: (B, KH, S, D) -> (B, H, S, D)."""
+                    block_kv: int = 512, q_offset: int = 0,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, D); k, v: (B, KH, Skv, D) -> (B, H, S, D).
+
+    ``q_offset`` (static) places the queries at global positions
+    [q_offset, q_offset + S) against KV positions [0, Skv) — the chunked
+    serving-prefill case, where chunk c of a prompt attends causally over
+    the cache prefix written by chunks 0..c."""
     B, H, S, D = q.shape
     KH, Skv = k.shape[1], k.shape[2]
     G = H // KH
     bq, bkv = min(block_q, S), min(block_kv, Skv)
     assert S % bq == 0 and Skv % bkv == 0
+    assert q_offset == 0 or q_offset + S <= Skv, (q_offset, S, Skv)
     n_q, n_kv = S // bq, Skv // bkv
     scale = 1.0 / math.sqrt(D)
 
@@ -84,7 +92,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vf = v.reshape(B * KH, Skv, D)
 
     kern = functools.partial(_kernel, scale=scale, causal=causal,
-                             block_q=bq, block_kv=bkv, n_kv=n_kv)
+                             block_q=bq, block_kv=bkv, n_kv=n_kv,
+                             q_offset=q_offset)
     out = pl.pallas_call(
         kern,
         grid=(B * KH, G, n_q, n_kv),

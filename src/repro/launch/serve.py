@@ -24,6 +24,11 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=0,
+                    help="fixed prompt length (0 = random 2..9)")
+    ap.add_argument("--prefill-mode", default="batched",
+                    choices=["batched", "sequential"])
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -32,10 +37,12 @@ def main(argv=None):
     params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params,
                       ServeConfig(max_slots=args.slots,
-                                  max_len=args.max_len))
+                                  max_len=args.max_len,
+                                  prefill_mode=args.prefill_mode,
+                                  prefill_chunk=args.prefill_chunk))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
-        plen = int(rng.integers(2, 10))
+        plen = args.prompt_len or int(rng.integers(2, 10))
         eng.add_request(rng.integers(0, cfg.vocab_size, plen),
                         max_new_tokens=args.max_new)
     t0 = time.time()
@@ -44,9 +51,16 @@ def main(argv=None):
     tokens = sum(len(v) for v in results.values())
     print(f"[serve] {len(results)} requests, {tokens} tokens "
           f"in {dt:.2f}s ({tokens/dt:.1f} tok/s)")
-    gemv_steps = sum(1 for e in eng.pas_log if e["gemv_path"])
-    print(f"[serve] PAS: {gemv_steps}/{len(eng.pas_log)} steps on the "
-          f"GEMV (PIM-analogue) path")
+    by_phase = {}
+    for e in eng.pas_log:
+        by_phase.setdefault(e["phase"], []).append(e)
+    for phase, entries in by_phase.items():
+        gemv = sum(1 for e in entries if e["gemv_path"])
+        print(f"[serve] PAS {phase}: {len(entries)} steps, "
+              f"{gemv} on the GEMV (PIM-analogue) path")
+    print(f"[serve] dispatches: {eng.dispatch_counts['prefill']} prefill "
+          f"({eng.effective_prefill_mode}), "
+          f"{eng.dispatch_counts['decode']} decode")
     return results
 
 

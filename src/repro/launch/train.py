@@ -119,6 +119,11 @@ def main(argv=None):
     losses = []
     for step in range(start, args.steps):
         if args.fail_at_step and step == args.fail_at_step:
+            # quiesce the async checkpoint writer first: the injected crash
+            # models "die after the last durable checkpoint", not "corrupt
+            # the in-flight write" (atomicity has its own test)
+            if mgr:
+                mgr.wait()
             print(f"[train] INJECTED FAILURE at step {step}", flush=True)
             os._exit(17)
         batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}

@@ -22,8 +22,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models.params import ParamDef
 from repro.models.layers import apply_rope
@@ -248,6 +248,100 @@ def attention_prefill(cfg: ModelConfig, p: dict, x: jax.Array,
                                 chunk_q=cfg.chunk_q, chunk_kv=cfg.chunk_kv)
     o = constrain(o, ("batch", "heads", "seq", "head_dim"))
     return out_project(p, o)
+
+
+# --------------------------------------------------------------------------- #
+# Batched serving prefill (summarization stage): whole prompt chunks through
+# the flash path, K/V written into the slot cache in one shot
+# --------------------------------------------------------------------------- #
+def write_kv_chunk(k_cache: jax.Array, v_cache: jax.Array,
+                   k_new: jax.Array, v_new: jax.Array,
+                   tok_valid: jax.Array, offset: int):
+    """Scatter a chunk's K/V into the slot cache.
+
+    k_new/v_new: (B, KH, C, hd) — token j of row b lands at cache position
+    offset + j. ``tok_valid`` (B, C) masks padding (per-slot prompt ends and
+    non-admitted slots): invalid writes are dropped, so other slots' cache
+    rows are untouched — unlike the one-token decode update, which clobbers
+    every row's cur_len position."""
+    B, KH, C, hd = k_new.shape
+    L = k_cache.shape[2]
+    pos = jnp.where(tok_valid, offset + jnp.arange(C)[None, :], L)     # (B, C)
+    b_idx = jnp.arange(B)[:, None]
+    k_cache = k_cache.at[b_idx, :, pos].set(
+        jnp.swapaxes(k_new, 1, 2).astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[b_idx, :, pos].set(
+        jnp.swapaxes(v_new, 1, 2).astype(v_cache.dtype), mode="drop")
+    return k_cache, v_cache
+
+
+def _write_scale_chunk(scale_cache: jax.Array, scale_new: jax.Array,
+                       tok_valid: jax.Array, offset: int) -> jax.Array:
+    """scale_cache: (B, KH, L); scale_new: (B, KH, C)."""
+    B, KH, C = scale_new.shape
+    L = scale_cache.shape[2]
+    pos = jnp.where(tok_valid, offset + jnp.arange(C)[None, :], L)
+    b_idx = jnp.arange(B)[:, None]
+    return scale_cache.at[b_idx, :, pos].set(
+        jnp.swapaxes(scale_new, 1, 2), mode="drop")
+
+
+def attention_prefill_cached(cfg: ModelConfig, p: dict, x: jax.Array,
+                             cache: dict, tok_valid: jax.Array,
+                             offset: int):
+    """One prefill chunk against the slot cache. x: (B, C, d) at global
+    positions [offset, offset+C). Writes the chunk's K/V into the cache and
+    attends causally over cache[:offset+C] via the flash path — one dispatch
+    covers every admitted slot's chunk instead of B*C decode steps.
+
+    Returns (out (B, C, d), new_cache). Padding rows (tok_valid False)
+    produce garbage outputs over zero K/V — callers discard them; their
+    cache writes are dropped."""
+    B, C, _ = x.shape
+    positions = offset + jnp.broadcast_to(jnp.arange(C)[None], (B, C))
+    q, k_new, v_new = qkv_project(cfg, p, x, positions)
+    new_cache = {}
+    if cfg.kv_dtype == "int8":
+        kq, ks = _quantize_kv(k_new)                 # scales (B, KH, C)
+        vq, vs = _quantize_kv(v_new)
+        k_cache, v_cache = write_kv_chunk(cache["k"], cache["v"], kq, vq,
+                                          tok_valid, offset)
+        k_sc = _write_scale_chunk(cache["k_scale"], ks, tok_valid, offset)
+        v_sc = _write_scale_chunk(cache["v_scale"], vs, tok_valid, offset)
+        new_cache.update(k_scale=k_sc, v_scale=v_sc)
+    else:
+        k_cache, v_cache = write_kv_chunk(cache["k"], cache["v"],
+                                          k_new, v_new, tok_valid, offset)
+    # attend over the populated prefix only — the span is static (chunk
+    # index is baked into the jitted function), so this is a free slice
+    span = min(offset + C, k_cache.shape[2])
+    k_att = jax.lax.slice_in_dim(k_cache, 0, span, axis=2)
+    v_att = jax.lax.slice_in_dim(v_cache, 0, span, axis=2)
+    if cfg.kv_dtype == "int8":
+        k_att = (k_att.astype(jnp.bfloat16)
+                 * jax.lax.slice_in_dim(k_sc, 0, span, axis=2
+                                        )[..., None].astype(jnp.bfloat16))
+        v_att = (v_att.astype(jnp.bfloat16)
+                 * jax.lax.slice_in_dim(v_sc, 0, span, axis=2
+                                        )[..., None].astype(jnp.bfloat16))
+    # the Pallas kernel needs the chunk grid to tile the span exactly; the
+    # last chunk can overhang the cache (max_len not a multiple of the
+    # chunk) — its overhanging rows are padding, which the XLA twin masks
+    # fine, so route ragged shapes there
+    bq, bkv = min(cfg.chunk_q, C), min(cfg.chunk_kv, C)
+    pallas_ok = (cfg.use_pallas and offset + C == span
+                 and C % bq == 0 and span % bkv == 0)
+    if pallas_ok:
+        from repro.kernels.flash_attention import flash_attention
+        o = flash_attention(q, k_att, v_att, causal=True,
+                            block_q=bq, block_kv=bkv, q_offset=offset)
+    else:
+        o = flash_attention_xla(q, k_att, v_att, causal=True,
+                                chunk_q=cfg.chunk_q, chunk_kv=cfg.chunk_kv,
+                                q_offset=offset)
+    out = out_project(p, o)
+    new_cache.update(k=k_cache, v=v_cache)
+    return out, new_cache
 
 
 # --------------------------------------------------------------------------- #

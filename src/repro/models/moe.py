@@ -113,8 +113,9 @@ def apply_moe_ep(cfg: ModelConfig, p: dict, x: jax.Array,
     combined expert contributions psum over 'model'. Per-step collective
     payload drops from O(params) to O(tokens x d) — ~250x for kimi-1T
     decode (napkin math in the §Perf log)."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
     info = MeshInfo(mesh)

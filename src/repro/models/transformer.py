@@ -372,6 +372,70 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 
 # --------------------------------------------------------------------------- #
+# batched prefill (summarization stage): whole prompt chunks through the
+# flash path, K/V written into the slot cache in one dispatch per chunk
+# --------------------------------------------------------------------------- #
+def supports_batched_prefill(cfg: ModelConfig) -> bool:
+    """Attention-mixer stacks only: SSM/RWKV prompts need sequential state
+    threading, encdec needs the cross-KV fill — both take the sequential
+    path in the serving engine."""
+    return (cfg.family != "encdec"
+            and all(k == "attn" for k in cfg.layer_kinds()))
+
+
+def _apply_block_prefill(cfg: ModelConfig, kind: Tuple[str, str], p: dict,
+                         x: jax.Array, cache: dict, tok_valid: jax.Array,
+                         offset: int):
+    """Chunk-of-prompt block. x: (B, C, d). Returns (x, new_cache)."""
+    mixer, ffn = kind
+    if mixer != "attn":
+        raise NotImplementedError(
+            "batched prefill covers attention mixers only")
+    new_cache = dict(cache)
+    h = L.apply_norm(cfg, p["norm1"], x)
+    kv_in = {k: cache[k] for k in ("k", "v", "k_scale", "v_scale")
+             if k in cache}
+    y, kv = A.attention_prefill_cached(cfg, p["attn"], h, kv_in,
+                                       tok_valid, offset)
+    new_cache.update(kv)
+    x = x + y
+    h = L.apply_norm(cfg, p["norm2"], x)
+    if ffn == "moe":
+        y, _ = M.apply_moe(cfg, p["ffn"], h)
+    else:
+        y = L.apply_mlp(cfg, p["ffn"], h)
+    return x + y, new_cache
+
+
+def prefill_chunk(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                  cache: dict, tok_valid: jax.Array, *, offset: int):
+    """One batched-prefill dispatch: tokens (B, C) at global positions
+    [offset, offset+C) run through the full stack; every attention layer
+    writes its chunk K/V into the cache (writes masked by ``tok_valid``,
+    so only admitted slots' rows change). Returns the new cache.
+
+    Prefill emits no logits: the engine's first generation step feeds the
+    last prompt token, so the summarization stage is pure cache fill —
+    prefilling an S-token prompt costs ceil(S/C) dispatches instead of S
+    sequential decode steps."""
+    x = L.embed_tokens(params["embed"], tokens, cfg.d_model)
+    kinds = _position_kinds(cfg)
+
+    def body(x, xs):
+        blk, cache_slice = xs
+        new_slice = {}
+        for j, kind in enumerate(kinds):
+            x, nc = _apply_block_prefill(cfg, kind, blk[f"pos{j}"], x,
+                                         cache_slice[f"pos{j}"],
+                                         tok_valid, offset)
+            new_slice[f"pos{j}"] = nc
+        return x, new_slice
+
+    _, new_cache = _loop_blocks(cfg, body, x, (params["blocks"], cache))
+    return new_cache
+
+
+# --------------------------------------------------------------------------- #
 # prefill that also fills the cache (serving path; not the dry-run prefill)
 # --------------------------------------------------------------------------- #
 def prefill_with_cache(cfg: ModelConfig, params: dict, tokens: jax.Array,

@@ -1,18 +1,25 @@
-"""Serving engine: slot-based continuous batching over the decode step.
+"""Serving engine: phase-separated continuous batching (paper §3).
 
-The engine is the TPU realization of the paper's end-to-end inference flow:
-  * summarization (prefill) fills a slot's KV cache,
-  * generation runs one jit'd ``decode_step`` across all active slots,
-  * PAS (core/pas.py) routes the FC work: below the MXU token parallelism the
-    GEMV/streaming path wins (``decode_uses_gemv``) — the decision is logged
-    per step so examples can show the Algorithm-1 behaviour live.
+The engine is the TPU realization of the paper's two-phase inference flow:
+  * summarization (prefill) — compute-bound: admitted prompts run as whole
+    chunks through the flash-attention path (``T.prefill_chunk``), filling
+    every slot's KV cache in O(ceil(S/chunk)) dispatches instead of S
+    teacher-forced decode steps;
+  * generation (decode) — bandwidth-bound: one jit'd ``decode_step`` across
+    all active slots per emitted token;
+  * PAS (core/pas.py) routes the FC work per step and per phase: below the
+    MXU token parallelism the GEMV/streaming path wins (generation), above
+    it the GEMM path wins (summarization) — every step's phase and
+    ``route_fc_tpu`` decision lands in ``pas_log``, the Algorithm-1 twin.
 
 Continuous batching: requests join/leave slots between decode steps; the
-batch shape stays static (jit-stable), empty slots are masked.
+batch shape stays static (jit-stable), empty slots are masked. Slot lengths
+and last-token state live on device; sampling and termination are
+vectorized — the only host sync per step is fetching the sampled tokens.
 """
 from __future__ import annotations
 
-import dataclasses
+import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -21,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.pas import decode_uses_gemv, route_fc_tpu
+from repro.core.pas import phase_log_entry
 from repro.models import transformer as T
 from repro.models.params import init_params
 
@@ -35,6 +42,20 @@ class Request:
     done: bool = False
 
 
+# Jitted entry points are cached at module level keyed by the (frozen,
+# hashable) ModelConfig: every ServeEngine for the same config shares one
+# compiled decode step and one compiled prefill per chunk index, instead of
+# recompiling per engine instance.
+@functools.lru_cache(maxsize=None)
+def _jit_decode(cfg: ModelConfig):
+    return jax.jit(functools.partial(T.decode_step, cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_prefill(cfg: ModelConfig, offset: int):
+    return jax.jit(functools.partial(T.prefill_chunk, cfg, offset=offset))
+
+
 @dataclass(frozen=True)
 class ServeConfig:
     max_slots: int = 4
@@ -42,6 +63,8 @@ class ServeConfig:
     temperature: float = 0.0      # 0 = greedy
     eos_token: Optional[int] = None
     seed: int = 0
+    prefill_chunk: int = 32       # summarization chunk (tokens per dispatch)
+    prefill_mode: str = "batched"  # "batched" | "sequential" (reference)
 
 
 class ServeEngine:
@@ -52,90 +75,162 @@ class ServeEngine:
         B, L = scfg.max_slots, scfg.max_len
         self.cache = init_params(T.cache_defs(cfg, B, L),
                                  jax.random.PRNGKey(0))
-        self.lens = jnp.zeros((B,), jnp.int32)
+        self.lens = jnp.zeros((B,), jnp.int32)       # device (decode input)
+        self.last_tok = jnp.zeros((B,), jnp.int32)   # device (next decode input)
+        self._lens_host = np.zeros((B,), np.int64)   # host mirror (termination)
+        self._gen_count = np.zeros((B,), np.int64)
+        self._max_new = np.zeros((B,), np.int64)
         self.slot_req: List[Optional[Request]] = [None] * B
         self.queue: List[Request] = []
         self._next_rid = 0
         self._rng = jax.random.PRNGKey(scfg.seed)
-        self._decode = jax.jit(
-            lambda p, t, c, l: T.decode_step(cfg, p, t, c, l))
+        self._decode = _jit_decode(cfg)
+        self._batched_ok = T.supports_batched_prefill(cfg)
         self.pas_log: List[dict] = []
+        # dispatch accounting (benchmarks/serve_prefill.py reads this)
+        self.dispatch_counts = {"prefill": 0, "decode": 0}
 
     # ---- request lifecycle ------------------------------------------------- #
     def add_request(self, prompt_tokens, max_new_tokens: int = 32) -> int:
+        prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(prompt) > self.scfg.max_len - 1:
+            raise ValueError(f"prompt ({len(prompt)} tokens) exceeds "
+                             f"max_len-1 ({self.scfg.max_len - 1})")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(prompt_tokens, np.int32),
-                                  max_new_tokens))
+        self.queue.append(Request(rid, prompt, max_new_tokens))
         return rid
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    def _reset_slot(self, slot: int):
-        """Zero a slot's cache rows + length (cheap host-side update)."""
-        def zero_row(leaf):
-            return leaf.at[:, slot].set(0)
-        self.cache = jax.tree.map(zero_row, self.cache)
-        self.lens = self.lens.at[slot].set(0)
+    @property
+    def effective_prefill_mode(self) -> str:
+        """What prefill actually runs: "batched" only when both requested
+        and supported by the architecture (SSM/hybrid/encdec fall back)."""
+        if self._batched_ok and self.scfg.prefill_mode == "batched":
+            return "batched"
+        return "sequential"
 
+    # ---- summarization (prefill) phase ------------------------------------- #
     def _admit(self):
-        """Prefill queued requests into free slots (teacher-forced decode
-        steps — a short-prompt-appropriate prefill; long-context prefill
-        would run the flash kernel path instead)."""
-        for slot in self._free_slots():
-            if not self.queue:
+        """Admit queued requests into free slots and prefill their prompts
+        (prompt[:-1] fills the cache; the last prompt token is the first
+        generation step's input)."""
+        admitted: List[Tuple[int, Request]] = []
+        free = self._free_slots()
+        while free and self.queue:
+            admitted.append((free.pop(0), self.queue.pop(0)))
+        if not admitted:
+            return
+        slots = np.array([s for s, _ in admitted])
+        sl = jnp.asarray(slots)
+        # one masked reset for the whole admission batch (cache rows + lens)
+        self.cache = jax.tree.map(lambda leaf: leaf.at[:, sl].set(0),
+                                  self.cache)
+        self.lens = self.lens.at[sl].set(0)
+        self._lens_host[slots] = 0
+        for slot, req in admitted:
+            self.slot_req[slot] = req
+            self._max_new[slot] = req.max_new_tokens
+            self._gen_count[slot] = 0
+
+        if self.effective_prefill_mode == "batched":
+            self._prefill_batched(admitted)
+        else:
+            self._prefill_sequential(admitted)
+
+        plens = np.array([len(r.prompt) for _, r in admitted])
+        self.lens = self.lens.at[sl].set(jnp.asarray(plens - 1, jnp.int32))
+        self._lens_host[slots] = plens - 1
+        last = np.array([r.prompt[-1] for _, r in admitted], np.int32)
+        self.last_tok = self.last_tok.at[sl].set(jnp.asarray(last))
+
+    def _get_prefill_fn(self, chunk_idx: int):
+        """One jitted prefill per chunk index: the offset (and therefore the
+        attended KV span) is static, so chunk c compiles once and is reused
+        by every later admission batch (and engine instance)."""
+        return _jit_prefill(self.cfg, chunk_idx * self.scfg.prefill_chunk)
+
+    def _prefill_batched(self, admitted):
+        B, C = self.scfg.max_slots, self.scfg.prefill_chunk
+        S = max(len(r.prompt) - 1 for _, r in admitted)
+        if S == 0:
+            return
+        n_chunks = -(-S // C)
+        tokens = np.zeros((B, n_chunks * C), np.int32)
+        valid = np.zeros((B, n_chunks * C), bool)
+        for slot, req in admitted:
+            p = req.prompt[:-1]
+            tokens[slot, :len(p)] = p
+            valid[slot, :len(p)] = True
+        for c in range(n_chunks):
+            vc = valid[:, c * C:(c + 1) * C]
+            if not vc.any():
                 break
-            req = self.queue.pop(0)
-            self._reset_slot(slot)
-            for tok in req.prompt:
+            fn = self._get_prefill_fn(c)
+            self.cache = fn(self.params, jnp.asarray(tokens[:, c * C:(c + 1) * C]),
+                            self.cache, jnp.asarray(vc))
+            self.dispatch_counts["prefill"] += 1
+            self.pas_log.append(phase_log_entry(
+                "summarization", int(vc.sum()), len(admitted),
+                self.cfg.d_model, self.cfg.d_ff))
+
+    def _prefill_sequential(self, admitted):
+        """Reference path (and fallback for SSM/hybrid/encdec stacks):
+        teacher-forced decode steps, one dispatch + host sync per token."""
+        for slot, req in admitted:
+            for tok in req.prompt[:-1]:
                 t = jnp.zeros((self.scfg.max_slots, 1), jnp.int32
                               ).at[slot, 0].set(int(tok))
                 _logits, self.cache = self._decode(self.params, t, self.cache,
                                                    self.lens)
                 self.lens = self.lens.at[slot].add(1)
-            self.slot_req[slot] = req
+                self.dispatch_counts["prefill"] += 1
+            self.pas_log.append(phase_log_entry(
+                "summarization", max(len(req.prompt) - 1, 0), len(admitted),
+                self.cfg.d_model, self.cfg.d_ff))
 
-    # ---- one decode step across all slots ---------------------------------- #
+    # ---- generation phase: one decode step across all slots ----------------- #
     def step(self) -> List[Tuple[int, int]]:
         self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
+        active_np = np.array([r is not None for r in self.slot_req])
+        if not active_np.any():
             return []
-        B = self.scfg.max_slots
-        # PAS routing decision for this step (logged, Algorithm-1 twin)
-        n_tok = len(active)
-        self.pas_log.append({
-            "active": n_tok,
-            "gemv_path": decode_uses_gemv(n_tok),
-            "ffn_route": route_fc_tpu(n_tok, self.cfg.d_model, self.cfg.d_ff),
-        })
-        last = np.zeros((B, 1), np.int32)
-        for i in active:
-            r = self.slot_req[i]
-            last[i, 0] = (r.generated[-1] if r.generated else r.prompt[-1])
-        logits, self.cache = self._decode(self.params, jnp.asarray(last),
+        n_tok = int(active_np.sum())
+        self.pas_log.append(phase_log_entry(
+            "generation", n_tok, n_tok, self.cfg.d_model, self.cfg.d_ff))
+        logits, self.cache = self._decode(self.params, self.last_tok[:, None],
                                           self.cache, self.lens)
-        self.lens = self.lens + jnp.asarray(
-            [1 if self.slot_req[i] is not None else 0 for i in range(B)],
-            jnp.int32)
+        self.dispatch_counts["decode"] += 1
+        active = jnp.asarray(active_np)
+        self.lens = self.lens + active.astype(jnp.int32)
+        self._lens_host += active_np
         if self.scfg.temperature > 0:
             self._rng, sub = jax.random.split(self._rng)
             toks = jax.random.categorical(
                 sub, logits / self.scfg.temperature, axis=-1)
         else:
             toks = jnp.argmax(logits, axis=-1)
-        toks = np.asarray(toks)
+        toks = toks.astype(jnp.int32)
+        self.last_tok = jnp.where(active, toks, self.last_tok)
+        toks_np = np.asarray(toks)            # the step's single host sync
+        # vectorized termination: EOS / max_new_tokens / cache exhaustion
+        self._gen_count += active_np
+        eos = (toks_np == self.scfg.eos_token
+               if self.scfg.eos_token is not None
+               else np.zeros_like(active_np))
+        done = active_np & (eos | (self._gen_count >= self._max_new)
+                            | (self._lens_host >= self.scfg.max_len - 1))
         out = []
-        for i in active:
+        for i in np.nonzero(active_np)[0]:
             r = self.slot_req[i]
-            tok = int(toks[i])
+            tok = int(toks_np[i])
             r.generated.append(tok)
             out.append((r.rid, tok))
-            hit_eos = (self.scfg.eos_token is not None
-                       and tok == self.scfg.eos_token)
-            if hit_eos or len(r.generated) >= r.max_new_tokens \
-                    or int(self.lens[i]) >= self.scfg.max_len - 1:
+            if done[i]:
                 r.done = True
                 self.slot_req[i] = None
         return out

@@ -1,4 +1,6 @@
 import os
+import sys
+import types
 
 # smoke tests and benches see the single real CPU device; ONLY the dry-run
 # sets xla_force_host_platform_device_count (in its own subprocess).
@@ -6,6 +8,48 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 import pytest
+
+# --------------------------------------------------------------------------- #
+# Optional hypothesis: when the package is missing, install a stub module so
+# the property-test modules still *collect*; each @given test then skips at
+# run time instead of breaking the whole module at import. With hypothesis
+# installed (requirements-dev.txt) the real property suite runs unchanged.
+# --------------------------------------------------------------------------- #
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    class _Strategy:
+        """Stands in for any strategy object/factory; every attribute access
+        or call yields another _Strategy, so module-level strategy pipelines
+        like ``st.integers(...).map(f)`` or ``@st.composite`` still build."""
+
+        def __call__(self, *a, **k):
+            return _Strategy()
+
+        def __getattr__(self, name):
+            return _Strategy()
+
+    def _given(*a, **k):
+        def deco(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed; property test skipped")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            skipped.__module__ = fn.__module__
+            return skipped
+        return deco
+
+    def _settings(*a, **k):
+        return lambda fn: fn
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.assume = lambda *a, **k: True
+    _hyp.HealthCheck = _Strategy()
+    _hyp.strategies = _Strategy()
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _hyp.strategies
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,24 @@
+"""Every repro.* module must import cleanly.
+
+Import-time breakage (like the jax 0.4.x ``from jax import shard_map``
+regression) used to surface as collection errors across seven test modules;
+this pins it to one obvious test per module instead."""
+import importlib
+import pkgutil
+
+import pytest
+
+import repro
+
+MODULES = sorted(
+    name for _, name, _ in pkgutil.walk_packages(repro.__path__,
+                                                 prefix="repro."))
+
+
+def test_found_the_package_tree():
+    assert len(MODULES) > 30, MODULES
+
+
+@pytest.mark.parametrize("name", MODULES)
+def test_module_imports(name):
+    importlib.import_module(name)

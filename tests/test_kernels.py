@@ -60,6 +60,28 @@ def test_flash_attention(B, H, KH, S, D, causal, dtype):
                                want.astype(np.float32), rtol=5e-2, atol=5e-2)
 
 
+@pytest.mark.parametrize("B,H,KH,Sq,Skv,offset", [
+    (1, 4, 2, 32, 64, 32),     # chunk 1 of a 2-chunk prefill
+    (2, 4, 4, 64, 192, 128),   # chunk 2 of 3
+    (1, 8, 2, 32, 32, 0),      # degenerate: plain causal self-attn
+])
+def test_flash_attention_q_offset(B, H, KH, Sq, Skv, offset):
+    """Chunked-prefill masking: queries at global positions
+    [offset, offset+Sq) against KV [0, Skv) must equal the corresponding
+    row-block of full causal attention."""
+    D = 32
+    ks = jax.random.split(KEY, 3)
+    q_full = jax.random.normal(ks[0], (B, H, Skv, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KH, Skv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KH, Skv, D), jnp.float32)
+    q = q_full[:, :, offset:offset + Sq]
+    got = flash_attention(q, k, v, causal=True, block_q=16, block_kv=32,
+                          q_offset=offset, interpret=True)
+    want = ref.flash_attention_ref(q_full, k, v, causal=True
+                                   )[:, :, offset:offset + Sq]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("B,H,KH,S,D", [
     (2, 8, 2, 256, 64),
     (1, 4, 4, 128, 32),

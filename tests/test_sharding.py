@@ -8,8 +8,8 @@ from repro.sharding.axes import logical_spec
 
 
 def _mesh(shape, names):
-    return jax.make_mesh(shape, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    from repro.compat import make_mesh
+    return make_mesh(shape, names)
 
 
 @pytest.fixture(scope="module")

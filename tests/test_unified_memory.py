@@ -98,8 +98,8 @@ def test_tpu_unified_layout():
     from repro.core.unified_memory import assert_unified_layout
     from repro.models import transformer as T
     from repro.configs import get_arch
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     stats = assert_unified_layout(
         T.param_defs(get_arch("llama3.2-1b").reduced()), mesh)
     assert stats["resharded_bytes"] == 0
