@@ -1,0 +1,67 @@
+"""Served-trace replay: Fig. 10-style breakdown from a RECORDED workload.
+
+Where fig10_breakdown.py replays a synthetic single-step command stream,
+this benchmark serves an open-loop Poisson and a bursty workload through
+the real engine, lowers the recorded traces, and replays them on IANUS vs
+NPU-MEM — the paper's latency-breakdown methodology applied to served
+traffic (queueing, admission waves, mixed prompt lengths, early EOS)."""
+import jax
+
+from benchmarks.common import emit, ianus_sim, npumem_sim
+from repro.configs import get_arch
+from repro.core import NPU_MEM_HW
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serve import ServeConfig, ServeEngine
+from repro.trace import (TraceRecorder, TraceReplayer, bursty_arrivals,
+                         drive, poisson_arrivals, trace_to_commands)
+
+TAGS = ("fc_mha", "ffn", "self_attn", "norm_res", "lm_head")
+
+
+def _serve(cfg, params, arrivals):
+    rec = TraceRecorder()
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(max_slots=4, max_len=96, prefill_chunk=16,
+                                  eos_token=7),
+                      recorder=rec)
+    drive(eng, arrivals)
+    return rec.to_trace(), eng
+
+
+def run():
+    cfg = get_arch("llama3.2-1b").reduced()
+    full = get_arch("llama3.2-1b")      # lowering target: paper-scale dims
+    params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
+    kw = dict(vocab=cfg.vocab_size, prompt_len=(2, 48), max_new=(3, 12),
+              seed=0)
+    workloads = (
+        ("poisson", poisson_arrivals(0.5, 40, **kw)),
+        ("bursty", bursty_arrivals(0.5, 40, burst=5, idle=15, **kw)),
+    )
+    rows = []
+    for name, arrivals in workloads:
+        trace, eng = _serve(cfg, params, arrivals)
+        lowered = trace_to_commands(trace, cfg=full)
+        lowered_n = trace_to_commands(trace, cfg=full, hw=NPU_MEM_HW)
+        rep = TraceReplayer(ianus_sim(trace=True)).replay(lowered)
+        repn = TraceReplayer(npumem_sim(trace=True)).replay(lowered_n)
+        for tag in TAGS:
+            a = rep.exposed_tags.get(tag, 0.0)
+            b = repn.exposed_tags.get(tag, 0.0)
+            rows.append((f"trace/{name}/{tag}", a * 1e6,
+                         f"npumem_over_ianus={b / a:.2f}" if a else ""))
+        rows.append((f"trace/{name}/overall", rep.makespan * 1e6,
+                     f"speedup={repn.makespan / rep.makespan:.2f} "
+                     f"steps={len(lowered)} "
+                     f"mu_util={rep.result.group_utilization('MU'):.2f} "
+                     f"pim_util={rep.result.group_utilization('PIM'):.2f}"))
+        rows.append((f"trace/{name}/serve", 0.0,
+                     f"prefill_dispatches={eng.dispatch_counts['prefill']} "
+                     f"decode_dispatches={eng.dispatch_counts['decode']} "
+                     f"host_syncs={eng.host_syncs}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

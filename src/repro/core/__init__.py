@@ -19,8 +19,13 @@ from repro.core.pas import (
     MappingDecision,
     PASPolicy,
     adaptive_map,
+    command_from_dict,
+    command_to_dict,
     decide_qk_sv_unit,
+    decision_from_dict,
+    decision_to_dict,
     decode_uses_gemv,
+    lower_commands,
     phase_log_entry,
     route_fc_tpu,
     MU, VU, PIM, DMA,
@@ -38,7 +43,9 @@ __all__ = [
     "FCConfig", "HardwareModel", "IANUS_HW", "NPU_MEM_HW", "TPU_V5E",
     "TPU_ICI_BW", "RooflineTerms", "roofline",
     "Command", "MappingDecision", "PASPolicy", "adaptive_map",
-    "decide_qk_sv_unit", "decode_uses_gemv", "phase_log_entry",
+    "command_from_dict", "command_to_dict",
+    "decide_qk_sv_unit", "decision_from_dict", "decision_to_dict",
+    "decode_uses_gemv", "lower_commands", "phase_log_entry",
     "route_fc_tpu",
     "MU", "VU", "PIM", "DMA",
     "AddressMap", "MemoryPlan", "WeightTiler",

@@ -123,6 +123,58 @@ def adaptive_map(cmds: Sequence[Command], n_tokens: int,
 
 
 # --------------------------------------------------------------------------- #
+# Serialization (trace subsystem: lowered command streams + decisions travel
+# through JSONL alongside the recorded workload)
+# --------------------------------------------------------------------------- #
+def command_to_dict(c: Command) -> dict:
+    """JSON-safe form of a Command (FCConfig flattened, deps as a list)."""
+    return {
+        "name": c.name, "unit": c.unit, "kind": c.kind,
+        "n_tokens": c.n_tokens,
+        "fc": [c.fc.d_in, c.fc.d_out] if c.fc is not None else None,
+        "dim": c.dim, "vu_passes": c.vu_passes, "bytes": c.bytes,
+        "deps": list(c.deps), "tag": c.tag, "core": c.core,
+        "fused_act": c.fused_act, "weights_resident": c.weights_resident,
+    }
+
+
+def command_from_dict(d: dict) -> Command:
+    fc = FCConfig(*d["fc"]) if d.get("fc") is not None else None
+    return Command(
+        name=d["name"], unit=d["unit"], kind=d["kind"],
+        n_tokens=d.get("n_tokens", 1), fc=fc, dim=d.get("dim", 0),
+        vu_passes=d.get("vu_passes", 1.0), bytes=d.get("bytes", 0),
+        deps=tuple(d.get("deps", ())), tag=d.get("tag", ""),
+        core=d.get("core", 0), fused_act=d.get("fused_act", False),
+        weights_resident=d.get("weights_resident", True),
+    )
+
+
+def decision_to_dict(d: MappingDecision) -> dict:
+    return {"index": d.index, "name": d.name, "mu_time": d.mu_time,
+            "pim_time": d.pim_time, "chosen": d.chosen}
+
+
+def decision_from_dict(d: dict) -> MappingDecision:
+    return MappingDecision(index=d["index"], name=d["name"],
+                           mu_time=d["mu_time"], pim_time=d["pim_time"],
+                           chosen=d["chosen"])
+
+
+def lower_commands(cmds: Sequence[Command], n_tokens: int,
+                   hw: HardwareModel = IANUS_HW, adaptive: bool = True,
+                   ) -> Tuple[List[Command], List[MappingDecision]]:
+    """Trace-lowering entry point: run Algorithm 1 over an MU-mapped stream
+    and keep the decision log (``build_stage`` discards it). With
+    ``adaptive=False`` the stream passes through untouched — the NPU-MEM /
+    naive-mapping replay configurations."""
+    if not adaptive:
+        return list(cmds), []
+    out, decisions = adaptive_map(cmds, n_tokens, hw)
+    return out, decisions
+
+
+# --------------------------------------------------------------------------- #
 # Multi-head attention mapping (§5.3)
 # --------------------------------------------------------------------------- #
 def decide_qk_sv_unit(hw: HardwareModel, head_dim: int, kv_len: int,

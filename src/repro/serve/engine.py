@@ -5,17 +5,30 @@ The engine is the TPU realization of the paper's two-phase inference flow:
     chunks through the flash-attention path (``T.prefill_chunk``), filling
     every slot's KV cache in O(ceil(S/chunk)) dispatches instead of S
     teacher-forced decode steps;
-  * generation (decode) — bandwidth-bound: one jit'd ``decode_step`` across
-    all active slots per emitted token;
+  * generation (decode) — bandwidth-bound: one jit'd fused
+    decode+sample+terminate dispatch across all active slots per emitted
+    token; the only host sync is fetching the (token, done, len) triple;
   * PAS (core/pas.py) routes the FC work per step and per phase: below the
     MXU token parallelism the GEMV/streaming path wins (generation), above
     it the GEMM path wins (summarization) — every step's phase and
     ``route_fc_tpu`` decision lands in ``pas_log``, the Algorithm-1 twin.
 
 Continuous batching: requests join/leave slots between decode steps; the
-batch shape stays static (jit-stable), empty slots are masked. Slot lengths
-and last-token state live on device; sampling and termination are
-vectorized — the only host sync per step is fetching the sampled tokens.
+batch shape stays static (jit-stable), empty slots are masked. Slot lengths,
+last-token state, per-slot generation budgets and termination all live on
+device; sampling and the length/termination update are folded into the
+jitted decode step.
+
+Admission is length-bucketed by default: the queue is kept stably sorted by
+prefill chunk count, so each admission wave prefills prompts of similar
+length and the per-wave chunk loop is not stretched to the longest prompt of
+an arbitrary FIFO mix (``ServeConfig.admission = "fifo"`` restores arrival
+order; per-request greedy output is identical either way, only the dispatch
+schedule changes).
+
+A ``repro.trace.TraceRecorder`` can be attached at construction to capture
+every request / admission / prefill-dispatch / decode-step / completion
+event for offline lowering to PAS command streams (see repro/trace/).
 """
 from __future__ import annotations
 
@@ -40,6 +53,7 @@ class Request:
     max_new_tokens: int = 32
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    deferred: int = 0             # admission waves this request was passed over
 
 
 # Jitted entry points are cached at module level keyed by the (frozen,
@@ -56,6 +70,36 @@ def _jit_prefill(cfg: ModelConfig, offset: int):
     return jax.jit(functools.partial(T.prefill_chunk, cfg, offset=offset))
 
 
+@functools.lru_cache(maxsize=None)
+def _jit_decode_sample(cfg: ModelConfig, temperature: float,
+                       eos_token: Optional[int], max_len: int):
+    """Fused generation step: decode + sample + length/termination update in
+    ONE dispatch. Everything the host needs back (sampled token, done flag,
+    new length per slot) is stacked into a single (3, B) int32 array so the
+    step costs exactly one device->host transfer."""
+    def f(params, cache, last_tok, lens, active, gen_count, max_new, rng):
+        logits, cache = T.decode_step(cfg, params, last_tok[:, None],
+                                      cache, lens)
+        rng, sub = jax.random.split(rng)
+        if temperature > 0:
+            toks = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            toks = jnp.argmax(logits, axis=-1)
+        toks = jnp.where(active, toks.astype(jnp.int32), last_tok)
+        act32 = active.astype(jnp.int32)
+        lens = lens + act32
+        gen_count = gen_count + act32
+        if eos_token is not None:
+            eos = toks == eos_token
+        else:
+            eos = jnp.zeros_like(active)
+        done = active & (eos | (gen_count >= max_new)
+                         | (lens >= max_len - 1))
+        fetch = jnp.stack([toks, done.astype(jnp.int32), lens])
+        return fetch, cache, toks, lens, gen_count, rng
+    return jax.jit(f)
+
+
 @dataclass(frozen=True)
 class ServeConfig:
     max_slots: int = 4
@@ -65,10 +109,12 @@ class ServeConfig:
     seed: int = 0
     prefill_chunk: int = 32       # summarization chunk (tokens per dispatch)
     prefill_mode: str = "batched"  # "batched" | "sequential" (reference)
+    admission: str = "bucketed"   # "bucketed" (length-sorted) | "fifo"
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = ServeConfig()):
+    def __init__(self, cfg: ModelConfig, params,
+                 scfg: ServeConfig = ServeConfig(), recorder=None):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -77,18 +123,27 @@ class ServeEngine:
                                  jax.random.PRNGKey(0))
         self.lens = jnp.zeros((B,), jnp.int32)       # device (decode input)
         self.last_tok = jnp.zeros((B,), jnp.int32)   # device (next decode input)
-        self._lens_host = np.zeros((B,), np.int64)   # host mirror (termination)
-        self._gen_count = np.zeros((B,), np.int64)
-        self._max_new = np.zeros((B,), np.int64)
+        self.gen_count = jnp.zeros((B,), jnp.int32)  # device (termination)
+        self.max_new = jnp.zeros((B,), jnp.int32)    # device (termination)
         self.slot_req: List[Optional[Request]] = [None] * B
         self.queue: List[Request] = []
         self._next_rid = 0
         self._rng = jax.random.PRNGKey(scfg.seed)
         self._decode = _jit_decode(cfg)
+        self._decode_sample = _jit_decode_sample(
+            cfg, scfg.temperature, scfg.eos_token, scfg.max_len)
         self._batched_ok = T.supports_batched_prefill(cfg)
         self.pas_log: List[dict] = []
         # dispatch accounting (benchmarks/serve_prefill.py reads this)
         self.dispatch_counts = {"prefill": 0, "decode": 0}
+        self.host_syncs = 0           # device->host transfers forced per run
+        # padding-waste accounting for the batched prefill path:
+        # token_slots = B*C rows computed per dispatch; valid = useful ones
+        self.prefill_stats = {"token_slots": 0, "valid_tokens": 0}
+        self.step_idx = 0             # engine step counter (trace timeline)
+        self.recorder = recorder
+        if recorder is not None:
+            recorder.bind(self)
 
     # ---- request lifecycle ------------------------------------------------- #
     def add_request(self, prompt_tokens, max_new_tokens: int = 32) -> int:
@@ -101,6 +156,9 @@ class ServeEngine:
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, prompt, max_new_tokens))
+        if self.recorder is not None:
+            self.recorder.on_request(self.step_idx, rid, len(prompt),
+                                     max_new_tokens)
         return rid
 
     def _free_slots(self) -> List[int]:
@@ -114,28 +172,51 @@ class ServeEngine:
             return "batched"
         return "sequential"
 
+    def _chunk_bucket(self, req: Request) -> int:
+        """Length bucket = prefill chunk count (what the wave's cost is
+        quantized to)."""
+        C = self.scfg.prefill_chunk
+        return -(-max(len(req.prompt) - 1, 1) // C)
+
     # ---- summarization (prefill) phase ------------------------------------- #
     def _admit(self):
         """Admit queued requests into free slots and prefill their prompts
         (prompt[:-1] fills the cache; the last prompt token is the first
-        generation step's input)."""
-        admitted: List[Tuple[int, Request]] = []
+        generation step's input).
+
+        Bucketed admission: the queue is stably sorted by chunk-count bucket
+        (shortest first, arrival order within a bucket), so a wave admits
+        prompts of similar length and its chunk loop is not dominated by one
+        long straggler from an arbitrary FIFO mix. Aging bounds starvation:
+        each wave a request is passed over lowers its effective bucket by
+        one, so a long prompt outranks fresh short arrivals after at most
+        `bucket` waves."""
         free = self._free_slots()
+        if not (free and self.queue):
+            return
+        if self.scfg.admission == "bucketed" and len(self.queue) > 1:
+            self.queue.sort(key=lambda r: max(
+                self._chunk_bucket(r) - r.deferred, 0))
+        admitted: List[Tuple[int, Request]] = []
         while free and self.queue:
             admitted.append((free.pop(0), self.queue.pop(0)))
-        if not admitted:
-            return
+        for r in self.queue:
+            r.deferred += 1
         slots = np.array([s for s, _ in admitted])
         sl = jnp.asarray(slots)
         # one masked reset for the whole admission batch (cache rows + lens)
         self.cache = jax.tree.map(lambda leaf: leaf.at[:, sl].set(0),
                                   self.cache)
         self.lens = self.lens.at[sl].set(0)
-        self._lens_host[slots] = 0
+        self.gen_count = self.gen_count.at[sl].set(0)
+        self.max_new = self.max_new.at[sl].set(jnp.asarray(
+            [r.max_new_tokens for _, r in admitted], jnp.int32))
         for slot, req in admitted:
             self.slot_req[slot] = req
-            self._max_new[slot] = req.max_new_tokens
-            self._gen_count[slot] = 0
+        if self.recorder is not None:
+            self.recorder.on_admit(
+                self.step_idx,
+                [(int(s), r.rid, int(len(r.prompt))) for s, r in admitted])
 
         if self.effective_prefill_mode == "batched":
             self._prefill_batched(admitted)
@@ -144,7 +225,6 @@ class ServeEngine:
 
         plens = np.array([len(r.prompt) for _, r in admitted])
         self.lens = self.lens.at[sl].set(jnp.asarray(plens - 1, jnp.int32))
-        self._lens_host[slots] = plens - 1
         last = np.array([r.prompt[-1] for _, r in admitted], np.int32)
         self.last_tok = self.last_tok.at[sl].set(jnp.asarray(last))
 
@@ -174,9 +254,19 @@ class ServeEngine:
             self.cache = fn(self.params, jnp.asarray(tokens[:, c * C:(c + 1) * C]),
                             self.cache, jnp.asarray(vc))
             self.dispatch_counts["prefill"] += 1
-            self.pas_log.append(phase_log_entry(
+            self.prefill_stats["token_slots"] += B * C
+            self.prefill_stats["valid_tokens"] += int(vc.sum())
+            entry = phase_log_entry(
                 "summarization", int(vc.sum()), len(admitted),
-                self.cfg.d_model, self.cfg.d_ff))
+                self.cfg.d_model, self.cfg.d_ff)
+            self.pas_log.append(entry)
+            if self.recorder is not None:
+                self.recorder.on_prefill(
+                    self.step_idx, offset=c * C, chunk=C,
+                    valid=int(vc.sum()), kv=c * C + C,
+                    slots=[int(s) for s, _ in admitted
+                           if vc[s].any()],
+                    route=entry)
 
     def _prefill_sequential(self, admitted):
         """Reference path (and fallback for SSM/hybrid/encdec stacks):
@@ -189,50 +279,64 @@ class ServeEngine:
                                                    self.lens)
                 self.lens = self.lens.at[slot].add(1)
                 self.dispatch_counts["prefill"] += 1
-            self.pas_log.append(phase_log_entry(
-                "summarization", max(len(req.prompt) - 1, 0), len(admitted),
-                self.cfg.d_model, self.cfg.d_ff))
+            n_valid = max(len(req.prompt) - 1, 0)
+            entry = phase_log_entry(
+                "summarization", n_valid, len(admitted),
+                self.cfg.d_model, self.cfg.d_ff)
+            self.pas_log.append(entry)
+            if self.recorder is not None and n_valid:
+                self.recorder.on_prefill(
+                    self.step_idx, offset=0, chunk=n_valid, valid=n_valid,
+                    kv=n_valid, slots=[slot], route=entry)
 
-    # ---- generation phase: one decode step across all slots ----------------- #
+    # ---- generation phase: one fused decode dispatch across all slots ------- #
     def step(self) -> List[Tuple[int, int]]:
         self._admit()
         active_np = np.array([r is not None for r in self.slot_req])
         if not active_np.any():
-            return []
+            self.step_idx += 1     # idle steps still advance the timeline
+            return []              # (open-loop arrival processes need a clock)
         n_tok = int(active_np.sum())
-        self.pas_log.append(phase_log_entry(
-            "generation", n_tok, n_tok, self.cfg.d_model, self.cfg.d_ff))
-        logits, self.cache = self._decode(self.params, self.last_tok[:, None],
-                                          self.cache, self.lens)
+        entry = phase_log_entry(
+            "generation", n_tok, n_tok, self.cfg.d_model, self.cfg.d_ff)
+        self.pas_log.append(entry)
+        (fetch, self.cache, self.last_tok, self.lens, self.gen_count,
+         self._rng) = self._decode_sample(
+            self.params, self.cache, self.last_tok, self.lens,
+            jnp.asarray(active_np), self.gen_count, self.max_new, self._rng)
         self.dispatch_counts["decode"] += 1
-        active = jnp.asarray(active_np)
-        self.lens = self.lens + active.astype(jnp.int32)
-        self._lens_host += active_np
-        if self.scfg.temperature > 0:
-            self._rng, sub = jax.random.split(self._rng)
-            toks = jax.random.categorical(
-                sub, logits / self.scfg.temperature, axis=-1)
-        else:
-            toks = jnp.argmax(logits, axis=-1)
-        toks = toks.astype(jnp.int32)
-        self.last_tok = jnp.where(active, toks, self.last_tok)
-        toks_np = np.asarray(toks)            # the step's single host sync
-        # vectorized termination: EOS / max_new_tokens / cache exhaustion
-        self._gen_count += active_np
-        eos = (toks_np == self.scfg.eos_token
-               if self.scfg.eos_token is not None
-               else np.zeros_like(active_np))
-        done = active_np & (eos | (self._gen_count >= self._max_new)
-                            | (self._lens_host >= self.scfg.max_len - 1))
-        out = []
-        for i in np.nonzero(active_np)[0]:
+        fetch_np = np.asarray(fetch)          # the step's single host sync
+        self.host_syncs += 1
+        toks_np, done_np, lens_np = (fetch_np[0], fetch_np[1].astype(bool),
+                                     fetch_np[2])
+        active_idx = np.nonzero(active_np)[0]
+        out = [(self.slot_req[i].rid, int(toks_np[i])) for i in active_idx]
+        for i, (rid, tok) in zip(active_idx, out):
+            self.slot_req[i].generated.append(tok)
+        if self.recorder is not None:
+            # decode event first: completions reference the token it carries
+            self.recorder.on_decode(
+                self.step_idx, occupancy=n_tok,
+                slot_lens=[int(x) for x in lens_np],
+                slots=[int(i) for i in active_idx],
+                tokens=list(out), route=entry)
+        for i in active_idx:
+            if not done_np[i]:
+                continue
             r = self.slot_req[i]
-            tok = int(toks_np[i])
-            r.generated.append(tok)
-            out.append((r.rid, tok))
-            if done[i]:
-                r.done = True
-                self.slot_req[i] = None
+            r.done = True
+            self.slot_req[i] = None
+            if self.recorder is not None:
+                if self.scfg.eos_token is not None \
+                        and r.generated[-1] == self.scfg.eos_token:
+                    reason = "eos"
+                elif len(r.generated) >= r.max_new_tokens:
+                    reason = "max_new"
+                else:
+                    reason = "cache_full"
+                self.recorder.on_complete(self.step_idx, r.rid, reason,
+                                          len(r.generated))
+        self.step_idx += 1
         return out
 
     def run_until_done(self, max_steps: int = 10_000) -> Dict[int, List[int]]:

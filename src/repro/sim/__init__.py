@@ -1,4 +1,5 @@
-from repro.sim.engine import SimConfig, SimResult, Simulator
+from repro.sim.engine import SimConfig, SimResult, Simulator, merge_results
 from repro.sim import graphs, baselines, energy
 
-__all__ = ["SimConfig", "SimResult", "Simulator", "graphs", "baselines", "energy"]
+__all__ = ["SimConfig", "SimResult", "Simulator", "merge_results",
+           "graphs", "baselines", "energy"]

@@ -104,3 +104,24 @@ class DFXModel:
 
 A100 = A100Model()
 DFX = DFXModel()
+
+
+# --------------------------------------------------------------------------- #
+# served-trace replay on the analytic baselines
+# --------------------------------------------------------------------------- #
+def trace_latency(model, cfg: ModelConfig, steps) -> dict:
+    """Replay a served step sequence through an analytic baseline model.
+
+    ``steps`` is an iterable of (phase, n_tokens, kv_len) — the shape the
+    trace subsystem's ``LoweredStep`` records. Each summarization dispatch
+    costs one n-token model pass; each generation step one kv_len decode
+    step. Per-dispatch costing charges the baseline its weight traffic per
+    dispatch, exactly how these devices execute a chunked served schedule."""
+    out = {"summarization": 0.0, "generation": 0.0}
+    for phase, n, kv in steps:
+        if phase == "summarization":
+            out["summarization"] += model.summarization(cfg, n)
+        else:
+            out["generation"] += model.generation_step(cfg, kv)
+    out["total"] = out["summarization"] + out["generation"]
+    return out

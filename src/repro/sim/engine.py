@@ -55,6 +55,29 @@ class SimResult:
     def utilization(self, unit: str) -> float:
         return self.unit_busy.get(unit, 0.0) / self.makespan if self.makespan else 0.0
 
+    def group_utilization(self, prefix: str) -> float:
+        """Mean busy fraction over all unit instances with this prefix
+        ("MU" averages MU0..MU3; "PIM" is the single array)."""
+        units = [u for u in self.unit_busy if u.startswith(prefix)]
+        if not units or not self.makespan:
+            return 0.0
+        return sum(self.unit_busy[u] for u in units) \
+            / (len(units) * self.makespan)
+
+    def to_dict(self) -> dict:
+        """JSON-safe breakdown export (the trace-replay artifact format):
+        drops the raw event trace, keeps everything a Fig. 10-style report
+        needs."""
+        return {
+            "makespan": self.makespan,
+            "n_commands": self.n_commands,
+            "unit_busy": dict(self.unit_busy),
+            "tag_time": dict(self.tag_time),
+            "energy": dict(self.energy),
+            "utilization": {p: self.group_utilization(p)
+                            for p in ("MU", "VU", "PIM", "DMA")},
+        }
+
     def exposed_tag_time(self) -> Dict[str, float]:
         """Wall-clock-style per-tag attribution (requires trace=True):
         compute-unit busy time is charged fully; DMA time is charged only
@@ -256,3 +279,32 @@ class Simulator:
         makespan = max(done_time) if n else 0.0
         return SimResult(makespan=makespan, unit_busy=busy, tag_time=tag_time,
                          energy=energy, trace=trace, n_commands=n)
+
+
+# --------------------------------------------------------------------------- #
+# replay composition: a served trace lowers to one command stream per engine
+# step; steps execute back-to-back, so their results compose sequentially
+# --------------------------------------------------------------------------- #
+def merge_results(results: Sequence[SimResult]) -> SimResult:
+    """Sequential composition of per-step SimResults (trace replay): the
+    makespan is the sum, busy/tag/energy accumulate, and per-step event
+    traces are shifted onto one global timeline so ``exposed_tag_time``
+    still attributes DMA overlap correctly within each step."""
+    busy: Dict[str, float] = {}
+    tags: Dict[str, float] = {}
+    energy: Dict[str, float] = {}
+    trace: List[Tuple[float, float, str, str, str]] = []
+    t0, n_cmds = 0.0, 0
+    for r in results:
+        for k, v in r.unit_busy.items():
+            busy[k] = busy.get(k, 0.0) + v
+        for k, v in r.tag_time.items():
+            tags[k] = tags.get(k, 0.0) + v
+        for k, v in r.energy.items():
+            energy[k] = energy.get(k, 0.0) + v
+        for s, e, u, name, tag in r.trace:
+            trace.append((s + t0, e + t0, u, name, tag))
+        t0 += r.makespan
+        n_cmds += r.n_commands
+    return SimResult(makespan=t0, unit_busy=busy, tag_time=tags,
+                     energy=energy, trace=trace, n_commands=n_cmds)

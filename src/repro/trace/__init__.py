@@ -1,0 +1,44 @@
+"""Workload-trace subsystem: capture -> lower -> replay.
+
+  capture — ``TraceRecorder`` attached to a ServeEngine records every
+            request / admission / prefill dispatch / decode step /
+            completion, serializable to versioned JSONL (schema.py).
+  lower   — ``trace_to_commands`` turns each recorded dispatch into the PAS
+            command stream (Algorithm 1 + §5.3 MHA mapping) for that batch
+            state.
+  replay  — ``TraceReplayer`` drives ``sim.Simulator`` over the lowered
+            stream: Fig. 10-style breakdowns + live-vs-offline routing
+            divergence for a *served* workload.
+
+``arrivals`` provides Poisson/bursty open-loop load generators and the
+``drive`` loop so traces with realistic queueing exist without real traffic.
+"""
+from repro.trace.arrivals import (
+    ArrivalEvent,
+    bursty_arrivals,
+    drive,
+    poisson_arrivals,
+)
+from repro.trace.lower import (
+    LoweredStep,
+    divergence_report,
+    trace_to_commands,
+)
+from repro.trace.recorder import TraceRecorder
+from repro.trace.replay import ReplayResult, TraceReplayer, baseline_comparison
+from repro.trace.schema import (
+    SCHEMA_VERSION,
+    Trace,
+    TraceSchemaError,
+    model_config_from_header,
+    validate_event,
+)
+
+__all__ = [
+    "ArrivalEvent", "bursty_arrivals", "drive", "poisson_arrivals",
+    "LoweredStep", "divergence_report", "trace_to_commands",
+    "TraceRecorder",
+    "ReplayResult", "TraceReplayer", "baseline_comparison",
+    "SCHEMA_VERSION", "Trace", "TraceSchemaError",
+    "model_config_from_header", "validate_event",
+]

@@ -1,0 +1,90 @@
+"""Synthetic arrival processes + the open-loop driver.
+
+Real serving traffic is not "enqueue everything, drain": requests arrive
+over time, mix short and long prompts, and terminate early. These
+generators produce that scenario diversity without real traffic, keyed to
+the engine's step counter as the clock (one decode step = one time unit):
+
+  poisson_arrivals — open-loop Poisson(rate) arrivals per step
+  bursty_arrivals  — on/off-modulated Poisson (same mean load, bursty)
+
+``drive`` feeds an arrival list into a ``ServeEngine`` step by step, so a
+``TraceRecorder`` attached to the engine captures the arrival process,
+queueing, admission waves and early terminations exactly as served.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class ArrivalEvent:
+    step: int                 # engine step at which the request arrives
+    prompt: np.ndarray        # (prompt_len,) int32
+    max_new: int
+
+
+def _make_requests(rng: np.random.Generator, steps: np.ndarray,
+                   prompt_len: Tuple[int, int], max_new: Tuple[int, int],
+                   vocab: int) -> List[ArrivalEvent]:
+    out = []
+    for s in steps:
+        plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        out.append(ArrivalEvent(
+            step=int(s),
+            prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            max_new=int(rng.integers(max_new[0], max_new[1] + 1))))
+    return out
+
+
+def poisson_arrivals(rate: float, horizon: int, *, vocab: int,
+                     prompt_len: Tuple[int, int] = (2, 32),
+                     max_new: Tuple[int, int] = (4, 16),
+                     seed: int = 0) -> List[ArrivalEvent]:
+    """Open-loop load: per-step arrival counts ~ Poisson(rate), prompt
+    lengths and generation budgets uniform over the given ranges."""
+    rng = np.random.default_rng(seed)
+    counts = rng.poisson(rate, horizon)
+    steps = np.repeat(np.arange(horizon), counts)
+    return _make_requests(rng, steps, prompt_len, max_new, vocab)
+
+
+def bursty_arrivals(rate: float, horizon: int, *, vocab: int,
+                    burst: int = 8, idle: int = 24,
+                    prompt_len: Tuple[int, int] = (2, 32),
+                    max_new: Tuple[int, int] = (4, 16),
+                    seed: int = 0) -> List[ArrivalEvent]:
+    """On/off-modulated Poisson: arrivals only during `burst`-step windows
+    separated by `idle` quiet steps, with the on-rate scaled so the mean
+    load over the horizon matches ``rate`` — same offered load as the
+    Poisson process, concentrated into bursts (queueing stress)."""
+    rng = np.random.default_rng(seed)
+    period = burst + idle
+    on = (np.arange(horizon) % period) < burst
+    rate_on = rate * period / burst
+    counts = np.where(on, rng.poisson(rate_on, horizon), 0)
+    steps = np.repeat(np.arange(horizon), counts)
+    return _make_requests(rng, steps, prompt_len, max_new, vocab)
+
+
+def drive(engine, arrivals: List[ArrivalEvent],
+          max_steps: int = 100_000) -> Dict[int, List[int]]:
+    """Open-loop serve: inject each arrival once the engine clock reaches
+    its step (idle engine steps advance the clock), run until every arrival
+    has been served. Returns {rid: generated tokens}."""
+    pending = sorted(arrivals, key=lambda a: a.step)
+    results: Dict[int, List[int]] = {}
+    i = 0
+    for _ in range(max_steps):
+        while i < len(pending) and pending[i].step <= engine.step_idx:
+            engine.add_request(pending[i].prompt, pending[i].max_new)
+            i += 1
+        if i >= len(pending) and not engine.queue \
+                and all(r is None for r in engine.slot_req):
+            return results
+        for rid, tok in engine.step():
+            results.setdefault(rid, []).append(tok)
+    raise RuntimeError(f"workload did not drain in {max_steps} steps")

@@ -1,0 +1,98 @@
+"""TraceRecorder: capture a served workload from ``ServeEngine``.
+
+Attach at engine construction (``ServeEngine(cfg, params, scfg,
+recorder=TraceRecorder())``); the engine calls the ``on_*`` hooks as
+requests arrive, admission waves prefill, and decode steps sample. The
+recorder is pure bookkeeping — it never forces a device sync; everything it
+stores is host data the engine already had (the per-step fetch already
+carries tokens, done flags and slot lengths in one transfer).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.trace.schema import SCHEMA_VERSION, Trace
+
+
+class TraceRecorder:
+    def __init__(self):
+        self._engine = None
+        self._header: Optional[dict] = None
+        self.events: List[dict] = []
+
+    # ---- engine attachment ------------------------------------------------ #
+    def bind(self, engine) -> None:
+        if self._engine is not None and self._engine is not engine:
+            raise RuntimeError("TraceRecorder is already bound to an engine")
+        self._engine = engine
+        cfg, scfg = engine.cfg, engine.scfg
+        self._header = {
+            "type": "header", "version": SCHEMA_VERSION,
+            "arch": cfg.name, "family": cfg.family,
+            "model": {
+                "num_layers": cfg.num_layers, "d_model": cfg.d_model,
+                "num_heads": cfg.num_heads, "num_kv_heads": cfg.num_kv_heads,
+                "head_dim": cfg.head_dim, "d_ff": cfg.d_ff,
+                "vocab_size": cfg.vocab_size,
+            },
+            "serve": {
+                "max_slots": scfg.max_slots, "max_len": scfg.max_len,
+                "prefill_chunk": scfg.prefill_chunk,
+                "prefill_mode": engine.effective_prefill_mode,
+                "admission": scfg.admission,
+                "temperature": scfg.temperature,
+                "eos_token": scfg.eos_token, "seed": scfg.seed,
+            },
+        }
+
+    # ---- engine hooks ------------------------------------------------------ #
+    def on_request(self, step: int, rid: int, prompt_len: int,
+                   max_new: int) -> None:
+        self.events.append({"type": "request", "step": step, "rid": rid,
+                            "prompt_len": prompt_len, "max_new": max_new})
+
+    def on_admit(self, step: int,
+                 wave: List[Tuple[int, int, int]]) -> None:
+        self.events.append({"type": "admit", "step": step,
+                            "wave": [list(w) for w in wave]})
+
+    def on_prefill(self, step: int, *, offset: int, chunk: int, valid: int,
+                   kv: int, slots: List[int], route: dict) -> None:
+        self.events.append({"type": "prefill", "step": step,
+                            "offset": offset, "chunk": chunk, "valid": valid,
+                            "kv": kv, "slots": slots, "route": dict(route)})
+
+    def on_decode(self, step: int, *, occupancy: int, slot_lens: List[int],
+                  slots: List[int], tokens: List[Tuple[int, int]],
+                  route: dict) -> None:
+        self.events.append({"type": "decode", "step": step,
+                            "occupancy": occupancy, "slot_lens": slot_lens,
+                            "slots": slots,
+                            "tokens": [list(t) for t in tokens],
+                            "route": dict(route)})
+
+    def on_complete(self, step: int, rid: int, reason: str,
+                    n_generated: int) -> None:
+        self.events.append({"type": "complete", "step": step, "rid": rid,
+                            "reason": reason, "n_generated": n_generated})
+
+    # ---- export ------------------------------------------------------------ #
+    def _summary(self) -> Optional[dict]:
+        if self._engine is None:
+            return None
+        e = self._engine
+        return {"type": "summary",
+                "dispatch_counts": dict(e.dispatch_counts),
+                "host_syncs": e.host_syncs,
+                "prefill_stats": dict(e.prefill_stats)}
+
+    def to_trace(self) -> Trace:
+        if self._header is None:
+            raise RuntimeError("recorder was never bound to an engine")
+        return Trace(header=dict(self._header), events=list(self.events),
+                     summary=self._summary()).validate()
+
+    def save(self, path) -> Trace:
+        tr = self.to_trace()
+        tr.save(path)
+        return tr

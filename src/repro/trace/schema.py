@@ -1,0 +1,164 @@
+"""Workload-trace JSONL schema (versioned) + the ``Trace`` container.
+
+A trace is one JSON object per line:
+
+  line 1:   {"type": "header", "version": 1, "arch": ..., "family": ...,
+             "model": {num_layers, d_model, num_heads, num_kv_heads,
+                       head_dim, d_ff, vocab_size},
+             "serve": {max_slots, max_len, prefill_chunk, prefill_mode,
+                       admission, temperature, eos_token, seed}}
+  then, in engine-timeline order, any of:
+    {"type": "request",  "step", "rid", "prompt_len", "max_new"}
+    {"type": "admit",    "step", "wave": [[slot, rid, prompt_len], ...]}
+    {"type": "prefill",  "step", "offset", "chunk", "valid", "kv",
+                         "slots": [...], "route": {phase_log_entry}}
+    {"type": "decode",   "step", "occupancy", "slot_lens": [per-slot len],
+                         "slots": [...], "tokens": [[rid, tok], ...],
+                         "route": {phase_log_entry}}
+    {"type": "complete", "step", "rid", "reason", "n_generated"}
+  last line: {"type": "summary", "dispatch_counts", "host_syncs",
+              "prefill_stats"}
+
+"prefill" and "decode" are the *schedulable* events: each lowers to one PAS
+command stream (see trace/lower.py). The header carries enough model shape
+to rebuild a ``ModelConfig`` for lowering without the original config module.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+
+SCHEMA_VERSION = 1
+
+# required keys per event type (beyond "type")
+_REQUIRED: Dict[str, tuple] = {
+    "header": ("version", "arch", "family", "model", "serve"),
+    "request": ("step", "rid", "prompt_len", "max_new"),
+    "admit": ("step", "wave"),
+    "prefill": ("step", "offset", "chunk", "valid", "kv", "slots", "route"),
+    "decode": ("step", "occupancy", "slot_lens", "slots", "tokens", "route"),
+    "complete": ("step", "rid", "reason", "n_generated"),
+    "summary": ("dispatch_counts", "host_syncs", "prefill_stats"),
+}
+_MODEL_KEYS = ("num_layers", "d_model", "num_heads", "num_kv_heads",
+               "head_dim", "d_ff", "vocab_size")
+_ROUTE_KEYS = ("phase", "tokens", "active", "gemv_path", "ffn_route")
+
+
+class TraceSchemaError(ValueError):
+    pass
+
+
+def validate_event(ev: dict) -> dict:
+    """Schema-validate one trace line; returns it unchanged on success."""
+    if not isinstance(ev, dict) or "type" not in ev:
+        raise TraceSchemaError(f"not a trace event: {ev!r}")
+    t = ev["type"]
+    if t not in _REQUIRED:
+        raise TraceSchemaError(f"unknown event type {t!r}")
+    missing = [k for k in _REQUIRED[t] if k not in ev]
+    if missing:
+        raise TraceSchemaError(f"{t} event missing keys {missing}: {ev!r}")
+    if t == "header":
+        if ev["version"] != SCHEMA_VERSION:
+            raise TraceSchemaError(
+                f"unsupported trace version {ev['version']} "
+                f"(supported: {SCHEMA_VERSION})")
+        missing = [k for k in _MODEL_KEYS if k not in ev["model"]]
+        if missing:
+            raise TraceSchemaError(f"header.model missing {missing}")
+    if t in ("prefill", "decode"):
+        missing = [k for k in _ROUTE_KEYS if k not in ev["route"]]
+        if missing:
+            raise TraceSchemaError(f"{t}.route missing {missing}")
+    return ev
+
+
+def model_config_from_header(header: dict) -> ModelConfig:
+    """Rebuild a lowering-sufficient ModelConfig from a trace header. Only
+    the shape fields the command builders read are restored — the trace does
+    not carry weights or execution knobs."""
+    m = header["model"]
+    return ModelConfig(
+        name=header["arch"], family=header["family"],
+        num_layers=m["num_layers"], d_model=m["d_model"],
+        num_heads=m["num_heads"], num_kv_heads=m["num_kv_heads"],
+        head_dim=m["head_dim"], d_ff=m["d_ff"],
+        vocab_size=m["vocab_size"],
+    )
+
+
+@dataclass
+class Trace:
+    """A loaded (or freshly recorded) workload trace."""
+    header: dict
+    events: List[dict] = field(default_factory=list)
+    summary: Optional[dict] = None
+
+    def of_type(self, t: str) -> List[dict]:
+        return [e for e in self.events if e["type"] == t]
+
+    @property
+    def schedulable(self) -> List[dict]:
+        """The events that lower to command streams, in timeline order."""
+        return [e for e in self.events if e["type"] in ("prefill", "decode")]
+
+    def validate(self) -> "Trace":
+        validate_event(self.header)
+        for e in self.events:
+            validate_event(e)
+        if self.summary is not None:
+            validate_event(self.summary)
+        return self
+
+    # ---- (de)serialization ------------------------------------------------ #
+    def dumps(self) -> str:
+        lines = [json.dumps(self.header)]
+        lines += [json.dumps(e) for e in self.events]
+        if self.summary is not None:
+            lines.append(json.dumps(self.summary))
+        return "\n".join(lines) + "\n"
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.dumps())
+
+    @classmethod
+    def loads(cls, text: str) -> "Trace":
+        header, events, summary = None, [], None
+        for ln, line in enumerate(text.splitlines(), 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise TraceSchemaError(f"line {ln}: bad JSON ({e})") from e
+            validate_event(ev)
+            if ev["type"] == "header":
+                if header is not None:
+                    raise TraceSchemaError(f"line {ln}: duplicate header")
+                header = ev
+                continue
+            if header is None:
+                raise TraceSchemaError(
+                    f"line {ln}: {ev['type']} before header")
+            if summary is not None:
+                raise TraceSchemaError(
+                    f"line {ln}: {ev['type']} after summary "
+                    f"(summary must be the last line)")
+            if ev["type"] == "summary":
+                summary = ev
+            else:
+                events.append(ev)
+        if header is None:
+            raise TraceSchemaError("trace has no header line")
+        return cls(header=header, events=events, summary=summary)
+
+    @classmethod
+    def load(cls, path) -> "Trace":
+        with open(path) as f:
+            return cls.loads(f.read())
