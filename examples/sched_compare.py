@@ -1,0 +1,104 @@
+"""Policy bake-off: serve -> trace -> replay under every sched policy.
+
+Serves one mixed-arrival workload on the llama3.2-1b smoke config under
+``serial``, ``interleaved`` and ``pim_aware`` step composition, proves the
+greedy tokens are identical (scheduling never changes numerics), and
+replays each recorded trace through the simulator at full llama3.2-1b dims
+— the Fig. 7 claim, measured on a *served* schedule: co-scheduling the
+prefill sub-batch's NPU GEMMs with the resident batch's PIM FC mat-vecs
+shortens the makespan and raises combined NPU+PIM utilization, while the
+pim_aware gate only overlaps steps whose FC mappings land on different
+engines.
+
+    PYTHONPATH=src python examples/sched_compare.py
+    PYTHONPATH=src python examples/sched_compare.py --requests 8 \
+        --out sched_compare.json      # CI smoke artifact
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serve import ServeConfig, ServeEngine
+from repro.trace import (TraceRecorder, TraceReplayer, drive,
+                         poisson_arrivals, trace_to_commands)
+
+POLICIES = ("serial", "interleaved", "pim_aware")
+FULL_DIMS = (2048, 8192)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12,
+                    help="approximate open-loop workload size")
+    ap.add_argument("--out", default=None,
+                    help="write the comparison as JSON (CI artifact)")
+    args = ap.parse_args()
+
+    cfg = get_arch("llama3.2-1b").reduced()
+    full = get_arch("llama3.2-1b")
+    params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
+    horizon = max(8, args.requests * 2)
+    arrivals = poisson_arrivals(args.requests / horizon, horizon,
+                                vocab=cfg.vocab_size, prompt_len=(2, 40),
+                                max_new=(3, 8), seed=1)
+    print(f"workload: {len(arrivals)} mixed-length requests over "
+          f"{horizon} arrival steps\n")
+
+    payload, results = {}, {}
+    for pol in POLICIES:
+        rec = TraceRecorder()
+        eng = ServeEngine(cfg, params,
+                          ServeConfig(max_slots=4, max_len=64,
+                                      prefill_chunk=8, policy=pol,
+                                      map_dims=FULL_DIMS),
+                          recorder=rec)
+        results[pol] = drive(eng, arrivals)
+        rep = TraceReplayer().replay(
+            trace_to_commands(rec.to_trace(), cfg=full))
+        stats = eng.scheduler.stats
+        payload[pol] = {
+            "steps": eng.step_idx,
+            "dispatch_counts": dict(eng.dispatch_counts),
+            "host_syncs": eng.host_syncs,
+            "async_fetches": eng.async_fetches,
+            "scheduler_stats": dict(stats),
+            "replay": rep.to_dict(),
+        }
+        print(f"{pol:>12}: {eng.step_idx} engine steps | "
+              f"{eng.dispatch_counts['prefill']} prefill + "
+              f"{eng.dispatch_counts['decode']} decode dispatches | "
+              f"{stats['overlapped']} overlapped / "
+              f"{stats['serialized']} serialized steps")
+        print(f"{'':>12}  replay (full dims): "
+              f"{rep.makespan * 1e3:.2f} ms makespan, "
+              f"MU {rep.result.group_utilization('MU'):.1%} + "
+              f"PIM {rep.result.group_utilization('PIM'):.1%}, "
+              f"overlap gain {rep.overlap_stats['gain'] * 1e3:.2f} ms")
+
+    same = results["serial"] == results["interleaved"] == \
+        results["pim_aware"]
+    assert same, "policies diverged numerically"
+    speedup = (payload["serial"]["replay"]["breakdown"]["makespan"]
+               / payload["interleaved"]["replay"]["breakdown"]["makespan"])
+    print(f"\ngreedy tokens identical across policies "
+          f"({sum(map(len, results['serial'].values()))} tokens); "
+          f"interleaved replay speedup over serial: {speedup:.2f}x")
+
+    if args.out:
+        payload["equivalent_tokens"] = same
+        payload["interleaved_speedup"] = speedup
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"comparison written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

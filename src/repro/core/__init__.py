@@ -26,6 +26,7 @@ from repro.core.pas import (
     decision_to_dict,
     decode_uses_gemv,
     lower_commands,
+    merge_streams,
     phase_log_entry,
     route_fc_tpu,
     MU, VU, PIM, DMA,
@@ -45,8 +46,8 @@ __all__ = [
     "Command", "MappingDecision", "PASPolicy", "adaptive_map",
     "command_from_dict", "command_to_dict",
     "decide_qk_sv_unit", "decision_from_dict", "decision_to_dict",
-    "decode_uses_gemv", "lower_commands", "phase_log_entry",
-    "route_fc_tpu",
+    "decode_uses_gemv", "lower_commands", "merge_streams",
+    "phase_log_entry", "route_fc_tpu",
     "MU", "VU", "PIM", "DMA",
     "AddressMap", "MemoryPlan", "WeightTiler",
     "partitioned_plan", "shared_fraction", "unified_plan",

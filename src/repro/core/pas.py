@@ -175,6 +175,88 @@ def lower_commands(cmds: Sequence[Command], n_tokens: int,
 
 
 # --------------------------------------------------------------------------- #
+# Stream composition: overlapped phase streams / cross-step pipelining
+# --------------------------------------------------------------------------- #
+def _is_weight_load(c: Command) -> bool:
+    """FC weight-load DMAs (``<fc>.w<core>``; ``noop_load`` once Algorithm 1
+    voids them) — the only loads whose operands are static, and therefore
+    the only ones cross-step prefetch may hoist."""
+    return c.kind in ("dma_load", "noop_load") and ".w" in c.name
+
+
+def merge_streams(streams: Sequence[Sequence[Command]],
+                  mode: str = "parallel") -> List[Command]:
+    """Compose several per-dispatch command streams into ONE command DAG
+    with cross-stream dependencies, so the simulator can score them as a
+    single scheduling problem instead of back-to-back runs.
+
+    mode="parallel" — co-scheduled phase streams of one overlapped serving
+      step (interleaved prefill chunk + resident-batch decode): a shared
+      ``step_issue`` root models the host issuing both dispatches in one
+      step; beyond that the streams only interact through the machine
+      resources (per-core MU/VU, the PIM array, the shared unified-memory
+      device) inside the simulator — which is exactly the constraint set
+      the overlap must respect.
+
+    mode="pipelined" — consecutive serving steps with cross-step weight
+      prefetch (ROADMAP "trace-driven sim scenarios"): stream k+1's compute
+      is chained behind stream k's sinks (its input token / batch state
+      exists only once step k finishes), but its FC *weight* loads — whose
+      operands are static — are freed to start as soon as step k has
+      started, modeling next-step weight prefetch during the current step's
+      tail. Dynamic-operand loads (embeddings, KV prefetch) stay chained:
+      their contents depend on the previous step's output.
+
+    Commands are rebased and renamed ``s<i>.<name>``; Algorithm 1 must run
+    per stream *before* merging (its dep-indexed weight-void rewrite and
+    prefetch-credit scan assume a single stream in program order)."""
+    if mode not in ("parallel", "pipelined"):
+        raise ValueError(f"unknown merge mode {mode!r}")
+    streams = [list(s) for s in streams]
+    if len(streams) == 1:
+        return list(streams[0])
+    out: List[Command] = []
+    issue: Optional[int] = None
+    if mode == "parallel":
+        # the host issuing both dispatches in one step: one issue slot on a
+        # DMA queue, no memory-device occupancy (kind dma_onchip, 0 bytes)
+        out.append(Command("step_issue", DMA, "dma_onchip", tag="issue"))
+        issue = 0
+    prev_sources: Tuple[int, ...] = ()
+    prev_sinks: Tuple[int, ...] = ()
+    for si, stream in enumerate(streams):
+        off = len(out)
+        has_child = [False] * len(stream)
+        for c in stream:
+            for d in c.deps:
+                has_child[d] = True
+        src_local = {i for i, c in enumerate(stream) if not c.deps}
+        for i, c in enumerate(stream):
+            deps = tuple(d + off for d in c.deps)
+            if mode == "parallel":
+                if not deps:
+                    deps = (issue,)
+            elif si > 0:
+                if _is_weight_load(c) and c.deps \
+                        and all(d in src_local for d in c.deps):
+                    # static weight tiles: prefetch window opens with the
+                    # previous step's start, not its completion
+                    deps = prev_sources
+                elif not c.deps:
+                    # the stream's root (token/embedding load): the next
+                    # step's input exists only after the previous step
+                    deps = prev_sinks
+            out.append(dataclasses.replace(c, name=f"s{si}.{c.name}",
+                                           deps=deps))
+        if mode == "pipelined":
+            prev_sources = tuple(off + i for i in sorted(src_local)) \
+                or prev_sources
+            prev_sinks = tuple(off + i for i, hc in enumerate(has_child)
+                               if not hc)
+    return out
+
+
+# --------------------------------------------------------------------------- #
 # Multi-head attention mapping (§5.3)
 # --------------------------------------------------------------------------- #
 def decide_qk_sv_unit(hw: HardwareModel, head_dim: int, kv_len: int,

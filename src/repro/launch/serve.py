@@ -29,6 +29,9 @@ def main(argv=None):
     ap.add_argument("--prefill-mode", default="batched",
                     choices=["batched", "sequential"])
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--policy", default="serial",
+                    choices=["serial", "interleaved", "pim_aware"],
+                    help="step-composition policy (repro.sched)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -39,7 +42,8 @@ def main(argv=None):
                       ServeConfig(max_slots=args.slots,
                                   max_len=args.max_len,
                                   prefill_mode=args.prefill_mode,
-                                  prefill_chunk=args.prefill_chunk))
+                                  prefill_chunk=args.prefill_chunk,
+                                  policy=args.policy))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = args.prompt_len or int(rng.integers(2, 10))
@@ -61,6 +65,10 @@ def main(argv=None):
     print(f"[serve] dispatches: {eng.dispatch_counts['prefill']} prefill "
           f"({eng.effective_prefill_mode}), "
           f"{eng.dispatch_counts['decode']} decode")
+    stats = eng.scheduler.stats
+    print(f"[serve] policy {eng.effective_policy}: "
+          f"{stats['overlapped']} overlapped / {stats['serialized']} "
+          f"serialized / {stats['decode_only']} decode-only steps")
     return results
 
 

@@ -1,0 +1,37 @@
+"""Phase-interleaving scheduler subsystem (paper §4; NeuPIMs sub-batching).
+
+End-to-end LLM inference mixes a compute-bound phase (summarization /
+prefill) with a bandwidth-bound one (generation / decode); IANUS's claim is
+that the two must be mapped across the NPU and the PIM so neither engine
+idles. ``repro.sched`` makes that mapping a first-class, policy-driven
+decision over the serving engine:
+
+  * ``SerialScheduler``      — run each admission wave's prefill to
+                               completion, then decode (the pre-sched loop).
+  * ``InterleavedScheduler`` — split admissions into prefill sub-batches and
+                               co-schedule one prefill chunk per step with
+                               the resident batch's decode.
+  * ``PimAwareScheduler``    — co-schedule only when the two phases' FC
+                               mappings land on different engines
+                               (``route_fc_tpu``), honouring the
+                               unified-memory rank constraint.
+
+The scheduler drives ``ServeEngine`` phase primitives; the trace subsystem
+records each step's composition (sub-batch membership + overlap flags,
+schema v2) so the simulator can score the overlapped command streams
+(``core.pas.merge_streams`` + ``trace.replay``).
+"""
+from repro.sched.base import PrefillJob, Scheduler
+from repro.sched.policies import (
+    POLICY_NAMES,
+    InterleavedScheduler,
+    PimAwareScheduler,
+    SerialScheduler,
+    make_scheduler,
+)
+
+__all__ = [
+    "PrefillJob", "Scheduler",
+    "POLICY_NAMES", "InterleavedScheduler", "PimAwareScheduler",
+    "SerialScheduler", "make_scheduler",
+]

@@ -1,0 +1,180 @@
+"""The three step-composition policies (paper §4 Fig. 7 / NeuPIMs §4).
+
+serial       — today's wave loop, extracted: admit every free slot, run the
+               wave's prefill to completion inside the admission step, then
+               decode. Prefill and decode never share a step; the lowered
+               trace replays as back-to-back command streams.
+interleaved  — NeuPIMs-style sub-batch interleaving: an admission wave
+               becomes a ``PrefillJob`` and contributes ONE prefill chunk
+               per engine step, co-scheduled with the resident batch's
+               decode dispatch. The prefill chunk's NPU GEMMs overlap the
+               decode step's PIM FC mat-vecs; the trace records the pair as
+               an overlapped step and the replay merges their command
+               streams into one DAG (``core.pas.merge_streams``).
+pim_aware    — interleaved, gated by the mapping: co-schedule only when the
+               two phases' FC mappings land on *different* engines
+               (``route_fc_tpu`` over the FFN FC — the Algorithm-1 decision
+               procedure). When both phases map to the same engine the
+               unified-memory constraint (normal accesses and PIM
+               computation cannot overlap on the same rank, paper §1) makes
+               the overlap illusory, so the step serializes: decode
+               resolves first, then the prefill chunk dispatches with
+               ``overlap=False``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.core.cost_model import HardwareModel, IANUS_HW
+from repro.core.pas import route_fc_tpu
+from repro.sched.base import PrefillJob, Scheduler
+
+
+class SerialScheduler(Scheduler):
+    """Extracted pre-sched ``ServeEngine.step`` behaviour: admission wave
+    prefills to completion before the step's decode dispatch."""
+
+    name = "serial"
+
+    def step(self, engine) -> List[Tuple[int, int]]:
+        wave = engine.admit_wave()
+        if wave:
+            engine.prefill_wave(wave)
+        pending = engine.dispatch_decode()
+        if pending is None:
+            self._tick("prefill_only" if wave else "idle")
+            return []
+        self._tick("serialized" if wave else "decode_only")
+        return engine.resolve_decode(pending)
+
+
+class InterleavedScheduler(Scheduler):
+    """Overlap a prefill sub-batch with the resident batch's decode.
+
+    Step composition (both phases present): dispatch the decode for every
+    resident (fully prefilled) slot, start its async result copy, dispatch
+    the in-flight job's next prefill chunk while that copy is in flight,
+    then resolve. One chunk per step keeps the summarization stream fed
+    without stalling generation; ``sub_batch`` (ServeConfig) caps how many
+    free slots one wave claims."""
+
+    name = "interleaved"
+
+    def __init__(self, sub_batch: int = 0):
+        super().__init__()
+        self.sub_batch = sub_batch
+        self.job: Optional[PrefillJob] = None
+
+    # mapping-aware subclasses veto the overlap; base policy always takes it
+    def allow_overlap(self, engine) -> bool:
+        return True
+
+    def _start_job(self, engine) -> None:
+        if self.job is not None or not (engine.queue
+                                        and engine.free_slot_ids()):
+            return
+        # interleaving requires chunked prefill dispatches; the engine's
+        # effective_policy degrades SSM/hybrid/encdec stacks to serial
+        # before this scheduler is ever constructed
+        assert engine.effective_prefill_mode == "batched", \
+            "interleaving policies need the batched prefill path"
+        wave = engine.admit_wave(self.sub_batch or None)
+        if not wave:
+            return
+        job = engine.build_prefill_job(wave)
+        if job is None:                    # all-single-token prompts: no
+            engine.finish_prefill(wave)    # chunks to run, ready at once
+        else:
+            self.job = job
+
+    def _advance_job(self, engine, overlap: bool) -> None:
+        job = self.job
+        engine.dispatch_prefill_chunk(job, overlap=overlap)
+        if job.done:
+            engine.finish_prefill(job.wave)
+            self.job = None
+
+    def step(self, engine) -> List[Tuple[int, int]]:
+        self._start_job(engine)
+        have_prefill = self.job is not None
+        co = have_prefill and engine.has_ready_slots() \
+            and self.allow_overlap(engine)
+        pending = engine.dispatch_decode(overlap=co)
+        if co:
+            # the chunk dispatch rides inside the decode fetch window
+            self._advance_job(engine, overlap=True)
+            self._tick("overlapped")
+            return engine.resolve_decode(pending)
+        out = engine.resolve_decode(pending) if pending is not None else []
+        if have_prefill:
+            self._advance_job(engine, overlap=False)
+            self._tick("serialized" if pending is not None else "prefill_only")
+        elif pending is not None:
+            self._tick("decode_only")
+        else:
+            self._tick("idle")
+        return out
+
+
+class PimAwareScheduler(InterleavedScheduler):
+    """Interleaved, but consults the PAS mapping before co-scheduling.
+
+    The decision mirrors Algorithm 1's analytical comparison over the FFN FC
+    (the dominant weight-resident FC, same proxy as the engine's
+    ``phase_log_entry``): the prefill chunk maps by its valid-token count,
+    the decode by its occupancy. Different engines (one GEMM/MU, one
+    GEMV/PIM) ⇒ genuine NPU/PIM parallelism ⇒ overlap. Same engine ⇒ the
+    streams would contend for the same unit — and on the unified memory
+    system a PIM-mapped pair would additionally serialize on the rank — so
+    the step runs the phases back-to-back instead.
+
+    ``map_dims``/``hw`` default to the served model's (d_model, d_ff) on the
+    IANUS machine; smoke-dims engines typically pass the full-model dims so
+    the mapping sees paper-scale FCs (same convention as trace lowering)."""
+
+    name = "pim_aware"
+
+    def __init__(self, sub_batch: int = 0,
+                 map_dims: Optional[Tuple[int, int]] = None,
+                 hw: HardwareModel = IANUS_HW):
+        super().__init__(sub_batch)
+        self.map_dims = map_dims
+        self.hw = hw
+        self.decision_log: List[dict] = []
+
+    def allow_overlap(self, engine) -> bool:
+        d_in, d_out = self.map_dims or (engine.cfg.d_model, engine.cfg.d_ff)
+        n_prefill = self.job.next_valid_count()
+        n_decode = len(engine.ready_slot_ids())
+        prefill_route = route_fc_tpu(max(n_prefill, 1), d_in, d_out, self.hw)
+        decode_route = route_fc_tpu(max(n_decode, 1), d_in, d_out, self.hw)
+        ok = prefill_route != decode_route
+        self.decision_log.append({
+            "step": engine.step_idx, "n_prefill": n_prefill,
+            "n_decode": n_decode, "prefill_route": prefill_route,
+            "decode_route": decode_route, "overlap": ok,
+        })
+        return ok
+
+
+_POLICIES = {
+    SerialScheduler.name: SerialScheduler,
+    InterleavedScheduler.name: InterleavedScheduler,
+    PimAwareScheduler.name: PimAwareScheduler,
+}
+
+POLICY_NAMES = tuple(_POLICIES)
+
+
+def make_scheduler(policy: str, *, sub_batch: int = 0,
+                   map_dims: Optional[Tuple[int, int]] = None,
+                   hw: HardwareModel = IANUS_HW) -> Scheduler:
+    """Policy factory (``ServeConfig.policy`` values)."""
+    if policy == SerialScheduler.name:
+        return SerialScheduler()
+    if policy == InterleavedScheduler.name:
+        return InterleavedScheduler(sub_batch)
+    if policy == PimAwareScheduler.name:
+        return PimAwareScheduler(sub_batch, map_dims, hw)
+    raise ValueError(
+        f"unknown scheduling policy {policy!r} (have: {POLICY_NAMES})")

@@ -7,17 +7,30 @@ The engine is the TPU realization of the paper's two-phase inference flow:
     teacher-forced decode steps;
   * generation (decode) — bandwidth-bound: one jit'd fused
     decode+sample+terminate dispatch across all active slots per emitted
-    token; the only host sync is fetching the (token, done, len) triple;
+    token; the only host sync is fetching the (token, done, len) triple —
+    and that fetch copies asynchronously while the step's remaining
+    dispatches are issued (double-buffered fetch);
   * PAS (core/pas.py) routes the FC work per step and per phase: below the
     MXU token parallelism the GEMV/streaming path wins (generation), above
     it the GEMM path wins (summarization) — every step's phase and
     ``route_fc_tpu`` decision lands in ``pas_log``, the Algorithm-1 twin.
 
+Step composition is owned by a ``repro.sched`` policy (``ServeConfig.
+policy``): the engine exposes phase primitives — ``admit_wave``,
+``build_prefill_job`` / ``dispatch_prefill_chunk`` / ``finish_prefill`` for
+summarization, ``dispatch_decode`` / ``resolve_decode`` for generation —
+and the scheduler sequences them. ``serial`` reproduces the historical
+run-prefill-to-completion wave loop; ``interleaved`` / ``pim_aware``
+co-schedule a prefill chunk with the resident batch's decode step so the
+NPU-side prefill GEMMs overlap the PIM-side FC mat-vecs (see repro/sched/).
+
 Continuous batching: requests join/leave slots between decode steps; the
 batch shape stays static (jit-stable), empty slots are masked. Slot lengths,
 last-token state, per-slot generation budgets and termination all live on
 device; sampling and the length/termination update are folded into the
-jitted decode step.
+jitted decode step. A slot being prefilled across steps is *resident but
+not ready* (``slot_ready``): the decode active mask excludes it until its
+prompt is fully cached.
 
 Admission is length-bucketed by default: the queue is kept stably sorted by
 prefill chunk count, so each admission wave prefills prompts of similar
@@ -28,7 +41,8 @@ schedule changes).
 
 A ``repro.trace.TraceRecorder`` can be attached at construction to capture
 every request / admission / prefill-dispatch / decode-step / completion
-event for offline lowering to PAS command streams (see repro/trace/).
+event — including each step's sub-batch membership and overlap flags — for
+offline lowering to PAS command streams (see repro/trace/).
 """
 from __future__ import annotations
 
@@ -44,6 +58,7 @@ from repro.configs.base import ModelConfig
 from repro.core.pas import phase_log_entry
 from repro.models import transformer as T
 from repro.models.params import init_params
+from repro.sched import PrefillJob, make_scheduler
 
 
 @dataclass
@@ -110,6 +125,28 @@ class ServeConfig:
     prefill_chunk: int = 32       # summarization chunk (tokens per dispatch)
     prefill_mode: str = "batched"  # "batched" | "sequential" (reference)
     admission: str = "bucketed"   # "bucketed" (length-sorted) | "fifo"
+    # step-composition policy (repro.sched): "serial" | "interleaved" |
+    # "pim_aware"; sub_batch caps slots per interleaved admission wave
+    # (0 = all free slots); map_dims overrides the (d_model, d_ff) the
+    # pim_aware mapping check routes on (smoke engines pass full-model dims).
+    policy: str = "serial"
+    sub_batch: int = 0
+    map_dims: Optional[Tuple[int, int]] = None
+    # double-buffered token fetch: start the decode result's device->host
+    # copy asynchronously at dispatch so the step's co-scheduled prefill
+    # chunk (and host bookkeeping) overlaps the transfer.
+    double_buffer: bool = True
+
+
+@dataclass
+class PendingDecode:
+    """A dispatched-but-unresolved decode step: the device fetch array plus
+    the host-side view needed to attribute its results at resolve time."""
+    fetch: jax.Array
+    active_np: np.ndarray
+    n_tok: int
+    route: dict
+    overlap: bool = False
 
 
 class ServeEngine:
@@ -126,6 +163,7 @@ class ServeEngine:
         self.gen_count = jnp.zeros((B,), jnp.int32)  # device (termination)
         self.max_new = jnp.zeros((B,), jnp.int32)    # device (termination)
         self.slot_req: List[Optional[Request]] = [None] * B
+        self.slot_ready: List[bool] = [False] * B    # prompt fully prefilled
         self.queue: List[Request] = []
         self._next_rid = 0
         self._rng = jax.random.PRNGKey(scfg.seed)
@@ -133,14 +171,19 @@ class ServeEngine:
         self._decode_sample = _jit_decode_sample(
             cfg, scfg.temperature, scfg.eos_token, scfg.max_len)
         self._batched_ok = T.supports_batched_prefill(cfg)
+        self.scheduler = make_scheduler(self.effective_policy,
+                                        sub_batch=scfg.sub_batch,
+                                        map_dims=scfg.map_dims)
         self.pas_log: List[dict] = []
         # dispatch accounting (benchmarks/serve_prefill.py reads this)
         self.dispatch_counts = {"prefill": 0, "decode": 0}
-        self.host_syncs = 0           # device->host transfers forced per run
+        self.host_syncs = 0           # blocking device->host transfers
+        self.async_fetches = 0        # fetches whose copy started at dispatch
         # padding-waste accounting for the batched prefill path:
         # token_slots = B*C rows computed per dispatch; valid = useful ones
         self.prefill_stats = {"token_slots": 0, "valid_tokens": 0}
         self.step_idx = 0             # engine step counter (trace timeline)
+        self.wave_count = 0           # admission waves (trace sub-batch ids)
         self.recorder = recorder
         if recorder is not None:
             recorder.bind(self)
@@ -161,8 +204,17 @@ class ServeEngine:
                                      max_new_tokens)
         return rid
 
-    def _free_slots(self) -> List[int]:
+    def free_slot_ids(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def ready_slot_ids(self) -> List[int]:
+        """Slots with a fully prefilled request — the decode-eligible batch
+        (a slot mid-prefill is occupied but not ready)."""
+        return [i for i, r in enumerate(self.slot_req)
+                if r is not None and self.slot_ready[i]]
+
+    def has_ready_slots(self) -> bool:
+        return bool(self.ready_slot_ids())
 
     @property
     def effective_prefill_mode(self) -> str:
@@ -172,6 +224,15 @@ class ServeEngine:
             return "batched"
         return "sequential"
 
+    @property
+    def effective_policy(self) -> str:
+        """Interleaving needs chunked prefill dispatches to spread across
+        steps; architectures on the sequential fallback serve serially."""
+        if self.scfg.policy != "serial" \
+                and self.effective_prefill_mode != "batched":
+            return "serial"
+        return self.scfg.policy
+
     def _chunk_bucket(self, req: Request) -> int:
         """Length bucket = prefill chunk count (what the wave's cost is
         quantized to)."""
@@ -179,10 +240,13 @@ class ServeEngine:
         return -(-max(len(req.prompt) - 1, 1) // C)
 
     # ---- summarization (prefill) phase ------------------------------------- #
-    def _admit(self):
-        """Admit queued requests into free slots and prefill their prompts
-        (prompt[:-1] fills the cache; the last prompt token is the first
-        generation step's input).
+    def admit_wave(self, limit: Optional[int] = None
+                   ) -> List[Tuple[int, Request]]:
+        """Admit up to ``limit`` queued requests into free slots (all free
+        slots when ``limit`` is None): reset their cache rows / budgets and
+        mark them resident-but-not-ready. Prefill is the caller's job —
+        schedulers either run it to completion (``prefill_wave``) or spread
+        it across steps via a ``PrefillJob``.
 
         Bucketed admission: the queue is stably sorted by chunk-count bucket
         (shortest first, arrival order within a bucket), so a wave admits
@@ -191,42 +255,61 @@ class ServeEngine:
         each wave a request is passed over lowers its effective bucket by
         one, so a long prompt outranks fresh short arrivals after at most
         `bucket` waves."""
-        free = self._free_slots()
+        free = self.free_slot_ids()
         if not (free and self.queue):
-            return
+            return []
         if self.scfg.admission == "bucketed" and len(self.queue) > 1:
             self.queue.sort(key=lambda r: max(
                 self._chunk_bucket(r) - r.deferred, 0))
+        cap = len(free) if limit is None else min(limit, len(free))
         admitted: List[Tuple[int, Request]] = []
-        while free and self.queue:
+        while len(admitted) < cap and self.queue:
             admitted.append((free.pop(0), self.queue.pop(0)))
         for r in self.queue:
             r.deferred += 1
-        slots = np.array([s for s, _ in admitted])
-        sl = jnp.asarray(slots)
+        sl = jnp.asarray(np.array([s for s, _ in admitted]))
         # one masked reset for the whole admission batch (cache rows + lens)
         self.cache = jax.tree.map(lambda leaf: leaf.at[:, sl].set(0),
                                   self.cache)
-        self.lens = self.lens.at[sl].set(0)
+        # The fused decode step writes K/V at lens[slot] for EVERY slot
+        # (inactive ones included) as a dispatch side effect. While a slot
+        # is mid-prefill under an interleaving policy, co-scheduled decode
+        # steps must not clobber its freshly written prompt cache — park its
+        # write cursor at max_len-1, a position generation can never attend
+        # (termination fires before lens reaches it). The sequential prefill
+        # path instead drives ``lens`` itself, so it starts at 0.
+        park = self.scfg.max_len - 1 \
+            if self.effective_prefill_mode == "batched" else 0
+        self.lens = self.lens.at[sl].set(park)
         self.gen_count = self.gen_count.at[sl].set(0)
         self.max_new = self.max_new.at[sl].set(jnp.asarray(
             [r.max_new_tokens for _, r in admitted], jnp.int32))
         for slot, req in admitted:
             self.slot_req[slot] = req
+            self.slot_ready[slot] = False
+        self.wave_count += 1
         if self.recorder is not None:
             self.recorder.on_admit(
                 self.step_idx,
                 [(int(s), r.rid, int(len(r.prompt))) for s, r in admitted])
+        return admitted
 
-        if self.effective_prefill_mode == "batched":
-            self._prefill_batched(admitted)
-        else:
-            self._prefill_sequential(admitted)
-
-        plens = np.array([len(r.prompt) for _, r in admitted])
-        self.lens = self.lens.at[sl].set(jnp.asarray(plens - 1, jnp.int32))
-        last = np.array([r.prompt[-1] for _, r in admitted], np.int32)
-        self.last_tok = self.last_tok.at[sl].set(jnp.asarray(last))
+    def build_prefill_job(self, wave) -> Optional[PrefillJob]:
+        """Lay a wave's prompt tokens out for chunked dispatch. None when
+        the wave has no cache tokens to write (all single-token prompts)."""
+        B, C = self.scfg.max_slots, self.scfg.prefill_chunk
+        S = max(len(r.prompt) - 1 for _, r in wave)
+        if S == 0:
+            return None
+        n_chunks = -(-S // C)
+        tokens = np.zeros((B, n_chunks * C), np.int32)
+        valid = np.zeros((B, n_chunks * C), bool)
+        for slot, req in wave:
+            p = req.prompt[:-1]
+            tokens[slot, :len(p)] = p
+            valid[slot, :len(p)] = True
+        return PrefillJob(wave=wave, tokens=tokens, valid=valid, chunk=C,
+                          n_chunks=n_chunks, sub_batch=self.wave_count - 1)
 
     def _get_prefill_fn(self, chunk_idx: int):
         """One jitted prefill per chunk index: the offset (and therefore the
@@ -234,44 +317,71 @@ class ServeEngine:
         by every later admission batch (and engine instance)."""
         return _jit_prefill(self.cfg, chunk_idx * self.scfg.prefill_chunk)
 
-    def _prefill_batched(self, admitted):
-        B, C = self.scfg.max_slots, self.scfg.prefill_chunk
-        S = max(len(r.prompt) - 1 for _, r in admitted)
-        if S == 0:
+    def dispatch_prefill_chunk(self, job: PrefillJob, *,
+                               overlap: bool = False) -> None:
+        """Run the job's next chunk through the batched flash prefill path.
+        ``overlap=True`` marks the dispatch as co-scheduled with this step's
+        decode (recorded in the trace; the replay merges the two streams)."""
+        c, C = job.next_chunk, job.chunk
+        job.next_chunk += 1
+        vc = job.valid[:, c * C:(c + 1) * C]
+        if not vc.any():
             return
-        n_chunks = -(-S // C)
-        tokens = np.zeros((B, n_chunks * C), np.int32)
-        valid = np.zeros((B, n_chunks * C), bool)
-        for slot, req in admitted:
-            p = req.prompt[:-1]
-            tokens[slot, :len(p)] = p
-            valid[slot, :len(p)] = True
-        for c in range(n_chunks):
-            vc = valid[:, c * C:(c + 1) * C]
-            if not vc.any():
-                break
-            fn = self._get_prefill_fn(c)
-            self.cache = fn(self.params, jnp.asarray(tokens[:, c * C:(c + 1) * C]),
-                            self.cache, jnp.asarray(vc))
-            self.dispatch_counts["prefill"] += 1
-            self.prefill_stats["token_slots"] += B * C
-            self.prefill_stats["valid_tokens"] += int(vc.sum())
-            entry = phase_log_entry(
-                "summarization", int(vc.sum()), len(admitted),
-                self.cfg.d_model, self.cfg.d_ff)
-            self.pas_log.append(entry)
-            if self.recorder is not None:
-                self.recorder.on_prefill(
-                    self.step_idx, offset=c * C, chunk=C,
-                    valid=int(vc.sum()), kv=c * C + C,
-                    slots=[int(s) for s, _ in admitted
-                           if vc[s].any()],
-                    route=entry)
+        B = self.scfg.max_slots
+        fn = self._get_prefill_fn(c)
+        self.cache = fn(self.params,
+                        jnp.asarray(job.tokens[:, c * C:(c + 1) * C]),
+                        self.cache, jnp.asarray(vc))
+        self.dispatch_counts["prefill"] += 1
+        self.prefill_stats["token_slots"] += B * C
+        self.prefill_stats["valid_tokens"] += int(vc.sum())
+        entry = phase_log_entry(
+            "summarization", int(vc.sum()), len(job.wave),
+            self.cfg.d_model, self.cfg.d_ff)
+        self.pas_log.append(entry)
+        if self.recorder is not None:
+            self.recorder.on_prefill(
+                self.step_idx, offset=c * C, chunk=C,
+                valid=int(vc.sum()), kv=c * C + C,
+                slots=[int(s) for s, _ in job.wave if vc[s].any()],
+                route=entry, sub_batch=job.sub_batch, overlap=overlap)
 
-    def _prefill_sequential(self, admitted):
+    def finish_prefill(self, wave) -> None:
+        """A wave's prompt is fully cached: arm the slots for generation
+        (prompt[:-1] filled the cache; the last prompt token is the first
+        generation step's input)."""
+        sl = jnp.asarray(np.array([s for s, _ in wave]))
+        plens = np.array([len(r.prompt) for _, r in wave])
+        self.lens = self.lens.at[sl].set(jnp.asarray(plens - 1, jnp.int32))
+        last = np.array([r.prompt[-1] for _, r in wave], np.int32)
+        self.last_tok = self.last_tok.at[sl].set(jnp.asarray(last))
+        for slot, _ in wave:
+            self.slot_ready[slot] = True
+
+    def prefill_wave(self, wave) -> None:
+        """Serial-policy prefill: run the whole wave to completion within
+        the admission step (batched chunk loop or sequential fallback)."""
+        if self.effective_prefill_mode == "batched":
+            job = self.build_prefill_job(wave)
+            if job is not None:
+                while not job.done:
+                    self.dispatch_prefill_chunk(job)
+        else:
+            self._prefill_sequential(wave)
+        self.finish_prefill(wave)
+
+    def _admit(self) -> None:
+        """Legacy serial admission (kept for callers that drive prefill
+        directly, e.g. benchmarks/serve_prefill.py): admit every free slot
+        and prefill to completion."""
+        wave = self.admit_wave()
+        if wave:
+            self.prefill_wave(wave)
+
+    def _prefill_sequential(self, wave) -> None:
         """Reference path (and fallback for SSM/hybrid/encdec stacks):
         teacher-forced decode steps, one dispatch + host sync per token."""
-        for slot, req in admitted:
+        for slot, req in wave:
             for tok in req.prompt[:-1]:
                 t = jnp.zeros((self.scfg.max_slots, 1), jnp.int32
                               ).at[slot, 0].set(int(tok))
@@ -281,22 +391,28 @@ class ServeEngine:
                 self.dispatch_counts["prefill"] += 1
             n_valid = max(len(req.prompt) - 1, 0)
             entry = phase_log_entry(
-                "summarization", n_valid, len(admitted),
+                "summarization", n_valid, len(wave),
                 self.cfg.d_model, self.cfg.d_ff)
             self.pas_log.append(entry)
             if self.recorder is not None and n_valid:
                 self.recorder.on_prefill(
                     self.step_idx, offset=0, chunk=n_valid, valid=n_valid,
-                    kv=n_valid, slots=[slot], route=entry)
+                    kv=n_valid, slots=[slot], route=entry,
+                    sub_batch=self.wave_count - 1, overlap=False)
 
-    # ---- generation phase: one fused decode dispatch across all slots ------- #
-    def step(self) -> List[Tuple[int, int]]:
-        self._admit()
-        active_np = np.array([r is not None for r in self.slot_req])
-        if not active_np.any():
-            self.step_idx += 1     # idle steps still advance the timeline
-            return []              # (open-loop arrival processes need a clock)
-        n_tok = int(active_np.sum())
+    # ---- generation phase: one fused decode dispatch across ready slots ---- #
+    def dispatch_decode(self, *, overlap: bool = False
+                        ) -> Optional[PendingDecode]:
+        """Issue the fused decode+sample+terminate dispatch for every ready
+        slot and start the result's async device->host copy (double-buffered
+        fetch): the blocking sync happens in ``resolve_decode``, after the
+        scheduler has issued whatever it co-schedules in between."""
+        active_np = np.zeros((self.scfg.max_slots,), bool)
+        ready = self.ready_slot_ids()
+        if not ready:
+            return None
+        active_np[ready] = True
+        n_tok = len(ready)
         entry = phase_log_entry(
             "generation", n_tok, n_tok, self.cfg.d_model, self.cfg.d_ff)
         self.pas_log.append(entry)
@@ -305,27 +421,40 @@ class ServeEngine:
             self.params, self.cache, self.last_tok, self.lens,
             jnp.asarray(active_np), self.gen_count, self.max_new, self._rng)
         self.dispatch_counts["decode"] += 1
-        fetch_np = np.asarray(fetch)          # the step's single host sync
+        if self.scfg.double_buffer and hasattr(fetch, "copy_to_host_async"):
+            fetch.copy_to_host_async()
+            self.async_fetches += 1
+        return PendingDecode(fetch=fetch, active_np=active_np, n_tok=n_tok,
+                             route=entry, overlap=overlap)
+
+    def resolve_decode(self, pending: PendingDecode
+                       ) -> List[Tuple[int, int]]:
+        """Materialize a dispatched decode step's (token, done, len) triple
+        — the step's single blocking host sync — and apply its results:
+        token append, trace events, completions."""
+        fetch_np = np.asarray(pending.fetch)
         self.host_syncs += 1
         toks_np, done_np, lens_np = (fetch_np[0], fetch_np[1].astype(bool),
                                      fetch_np[2])
-        active_idx = np.nonzero(active_np)[0]
+        active_idx = np.nonzero(pending.active_np)[0]
         out = [(self.slot_req[i].rid, int(toks_np[i])) for i in active_idx]
         for i, (rid, tok) in zip(active_idx, out):
             self.slot_req[i].generated.append(tok)
         if self.recorder is not None:
             # decode event first: completions reference the token it carries
             self.recorder.on_decode(
-                self.step_idx, occupancy=n_tok,
+                self.step_idx, occupancy=pending.n_tok,
                 slot_lens=[int(x) for x in lens_np],
                 slots=[int(i) for i in active_idx],
-                tokens=list(out), route=entry)
+                tokens=list(out), route=pending.route,
+                overlap=pending.overlap)
         for i in active_idx:
             if not done_np[i]:
                 continue
             r = self.slot_req[i]
             r.done = True
             self.slot_req[i] = None
+            self.slot_ready[i] = False
             if self.recorder is not None:
                 if self.scfg.eos_token is not None \
                         and r.generated[-1] == self.scfg.eos_token:
@@ -336,8 +465,13 @@ class ServeEngine:
                     reason = "cache_full"
                 self.recorder.on_complete(self.step_idx, r.rid, reason,
                                           len(r.generated))
-        self.step_idx += 1
         return out
+
+    # ---- step: composition delegated to the scheduling policy --------------- #
+    def step(self) -> List[Tuple[int, int]]:
+        out = self.scheduler.step(self)
+        self.step_idx += 1     # idle steps still advance the timeline
+        return out             # (open-loop arrival processes need a clock)
 
     def run_until_done(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         results: Dict[int, List[int]] = {}

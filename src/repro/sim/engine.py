@@ -24,7 +24,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.cost_model import (
     HardwareModel, IANUS_HW, mu_fc_time, pim_fc_time, vu_time,
 )
-from repro.core.pas import Command, MU, VU, PIM, DMA
+from repro.core.pas import Command, MU, VU, PIM, DMA, merge_streams
 
 
 @dataclass(frozen=True)
@@ -55,6 +55,14 @@ class SimResult:
     def utilization(self, unit: str) -> float:
         return self.unit_busy.get(unit, 0.0) / self.makespan if self.makespan else 0.0
 
+    def concurrency(self) -> float:
+        """Mean number of busy unit instances over the makespan (>1 ⇒ the
+        schedule actually overlaps work across units — the metric the
+        overlapped phase-stream scoring reports)."""
+        if not self.makespan:
+            return 0.0
+        return sum(self.unit_busy.values()) / self.makespan
+
     def group_utilization(self, prefix: str) -> float:
         """Mean busy fraction over all unit instances with this prefix
         ("MU" averages MU0..MU3; "PIM" is the single array)."""
@@ -76,6 +84,7 @@ class SimResult:
             "energy": dict(self.energy),
             "utilization": {p: self.group_utilization(p)
                             for p in ("MU", "VU", "PIM", "DMA")},
+            "concurrency": self.concurrency(),
         }
 
     def exposed_tag_time(self) -> Dict[str, float]:
@@ -279,6 +288,15 @@ class Simulator:
         makespan = max(done_time) if n else 0.0
         return SimResult(makespan=makespan, unit_busy=busy, tag_time=tag_time,
                          energy=energy, trace=trace, n_commands=n)
+
+    def run_streams(self, streams: Sequence[Sequence[Command]],
+                    mode: str = "parallel") -> SimResult:
+        """Score several command streams as ONE scheduling problem
+        (``core.pas.merge_streams``): mode="parallel" for the co-scheduled
+        phase streams of an overlapped serving step (prefill chunk + decode
+        contending for units and the unified memory device), "pipelined"
+        for consecutive steps with cross-step weight prefetch."""
+        return self.run(merge_streams(streams, mode))
 
 
 # --------------------------------------------------------------------------- #

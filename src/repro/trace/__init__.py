@@ -8,7 +8,10 @@
             state.
   replay  — ``TraceReplayer`` drives ``sim.Simulator`` over the lowered
             stream: Fig. 10-style breakdowns + live-vs-offline routing
-            divergence for a *served* workload.
+            divergence for a *served* workload. Overlapped steps (schema
+            v2: an interleaved prefill chunk riding a decode dispatch)
+            replay as ONE merged command DAG; ``cross_step=True`` chains
+            the whole trace with next-step weight prefetch.
 
 ``arrivals`` provides Poisson/bursty open-loop load generators and the
 ``drive`` loop so traces with realistic queueing exist without real traffic.
@@ -22,23 +25,27 @@ from repro.trace.arrivals import (
 from repro.trace.lower import (
     LoweredStep,
     divergence_report,
+    group_overlapped,
     trace_to_commands,
 )
 from repro.trace.recorder import TraceRecorder
 from repro.trace.replay import ReplayResult, TraceReplayer, baseline_comparison
 from repro.trace.schema import (
     SCHEMA_VERSION,
+    SUPPORTED_VERSIONS,
     Trace,
     TraceSchemaError,
     model_config_from_header,
+    upgrade_event,
     validate_event,
 )
 
 __all__ = [
     "ArrivalEvent", "bursty_arrivals", "drive", "poisson_arrivals",
-    "LoweredStep", "divergence_report", "trace_to_commands",
+    "LoweredStep", "divergence_report", "group_overlapped",
+    "trace_to_commands",
     "TraceRecorder",
     "ReplayResult", "TraceReplayer", "baseline_comparison",
-    "SCHEMA_VERSION", "Trace", "TraceSchemaError",
-    "model_config_from_header", "validate_event",
+    "SCHEMA_VERSION", "SUPPORTED_VERSIONS", "Trace", "TraceSchemaError",
+    "model_config_from_header", "upgrade_event", "validate_event",
 ]

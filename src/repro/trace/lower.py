@@ -34,6 +34,8 @@ class LoweredStep:
     commands: List[Command]
     decisions: List[MappingDecision]   # Algorithm-1 log (offline mapping)
     live_route: dict           # the engine's phase_log_entry for this event
+    overlap: bool = False      # co-scheduled with the same step's other phase
+    sub_batch: int = -1        # prefill sub-batch (admission wave) ordinal
 
     def to_dict(self) -> dict:
         return {
@@ -42,6 +44,7 @@ class LoweredStep:
             "commands": [command_to_dict(c) for c in self.commands],
             "decisions": [decision_to_dict(d) for d in self.decisions],
             "live_route": dict(self.live_route),
+            "overlap": self.overlap, "sub_batch": self.sub_batch,
         }
 
 
@@ -78,8 +81,30 @@ def trace_to_commands(trace: Trace, cfg: Optional[ModelConfig] = None,
         out.append(LoweredStep(index=idx, step=ev["step"], phase=phase,
                                n_tokens=n, kv_len=kv, commands=cmds,
                                decisions=decisions,
-                               live_route=dict(ev["route"])))
+                               live_route=dict(ev["route"]),
+                               overlap=bool(ev.get("overlap", False)),
+                               sub_batch=int(ev.get("sub_batch", -1))))
     return out
+
+
+def group_overlapped(lowered: List[LoweredStep]) -> List[List[LoweredStep]]:
+    """Partition a lowered trace into co-scheduled stream groups.
+
+    Events flagged ``overlap`` that share an engine step were dispatched as
+    one overlapped serving step (an interleaved prefill chunk riding the
+    resident batch's decode) and form one group — the replay merges their
+    command streams into a single DAG (``core.pas.merge_streams``) and
+    scores them as one scheduling problem. Everything else (serial traces,
+    pim_aware-serialized steps) stays a singleton group, preserving the
+    sequential replay semantics byte-for-byte."""
+    groups: List[List[LoweredStep]] = []
+    for ls in lowered:
+        if (ls.overlap and groups and groups[-1][0].overlap
+                and groups[-1][0].step == ls.step):
+            groups[-1].append(ls)
+        else:
+            groups.append([ls])
+    return groups
 
 
 # --------------------------------------------------------------------------- #

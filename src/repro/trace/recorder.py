@@ -42,6 +42,8 @@ class TraceRecorder:
                 "admission": scfg.admission,
                 "temperature": scfg.temperature,
                 "eos_token": scfg.eos_token, "seed": scfg.seed,
+                "policy": engine.effective_policy,
+                "sub_batch": scfg.sub_batch,
             },
         }
 
@@ -57,19 +59,21 @@ class TraceRecorder:
                             "wave": [list(w) for w in wave]})
 
     def on_prefill(self, step: int, *, offset: int, chunk: int, valid: int,
-                   kv: int, slots: List[int], route: dict) -> None:
+                   kv: int, slots: List[int], route: dict,
+                   sub_batch: int = 0, overlap: bool = False) -> None:
         self.events.append({"type": "prefill", "step": step,
                             "offset": offset, "chunk": chunk, "valid": valid,
-                            "kv": kv, "slots": slots, "route": dict(route)})
+                            "kv": kv, "slots": slots, "route": dict(route),
+                            "sub_batch": sub_batch, "overlap": overlap})
 
     def on_decode(self, step: int, *, occupancy: int, slot_lens: List[int],
                   slots: List[int], tokens: List[Tuple[int, int]],
-                  route: dict) -> None:
+                  route: dict, overlap: bool = False) -> None:
         self.events.append({"type": "decode", "step": step,
                             "occupancy": occupancy, "slot_lens": slot_lens,
                             "slots": slots,
                             "tokens": [list(t) for t in tokens],
-                            "route": dict(route)})
+                            "route": dict(route), "overlap": overlap})
 
     def on_complete(self, step: int, rid: int, reason: str,
                     n_generated: int) -> None:

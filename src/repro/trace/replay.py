@@ -1,10 +1,27 @@
 """Replay a lowered workload trace through the discrete-event simulator.
 
 ``TraceReplayer`` runs every lowered step's command stream through
-``sim.Simulator`` and composes the per-step results sequentially (served
-steps execute back-to-back), producing a Fig. 10-style per-tag breakdown,
-per-phase latency split, and NPU/PIM utilization for the *served* workload
-— plus the live-vs-offline FC routing divergence report.
+``sim.Simulator`` and composes the per-step results (served steps execute
+back-to-back), producing a Fig. 10-style per-tag breakdown, per-phase
+latency split, and NPU/PIM utilization for the *served* workload — plus the
+live-vs-offline FC routing divergence report.
+
+Two scheduler-era extensions:
+
+  * **Overlapped steps** (schema v2, interleaved / pim_aware policies): a
+    prefill chunk co-scheduled with a decode dispatch replays as ONE merged
+    command DAG (``core.pas.merge_streams`` parallel mode), so the
+    simulator scores the NPU/PIM overlap under the machine's real resource
+    constraints (per-core units, the PIM array, the shared unified-memory
+    device). ``overlap_stats`` reports the gain vs running the same
+    streams back-to-back.
+  * **Cross-step pipelining** (``replay(..., cross_step=True)``): the whole
+    served sequence is additionally chained into one pipelined DAG in which
+    step k+1's FC *weight* loads may prefetch during step k's tail (their
+    operands are static; everything else stays chained). This is the
+    ROADMAP "trace-driven sim scenarios" item: ``pipeline`` reports the
+    chained makespan and its gain over back-to-back composition, and the
+    breakdown/utilization switch to the pipelined timeline.
 """
 from __future__ import annotations
 
@@ -12,19 +29,25 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
+from repro.core.pas import merge_streams
 from repro.sim import baselines
 from repro.sim.engine import SimConfig, SimResult, Simulator, merge_results
-from repro.trace.lower import LoweredStep, divergence_report
+from repro.trace.lower import LoweredStep, divergence_report, group_overlapped
 
 
 @dataclass
 class ReplayResult:
     """Aggregated replay of one trace on one simulator configuration."""
     result: SimResult                   # merged over all steps
-    phase_time: Dict[str, float]        # summarization / generation makespan
-    phase_steps: Dict[str, int]
+    phase_time: Dict[str, float]        # summarization / generation /
+    phase_steps: Dict[str, int]         #   overlapped makespan + step counts
     exposed_tags: Dict[str, float]      # Fig. 10 attribution (exposed DMA)
     divergence: List[dict] = field(default_factory=list)
+    # overlapped-step scoring: groups = co-scheduled steps merged into one
+    # DAG; gain = back-to-back time of their streams minus merged time
+    overlap_stats: Dict[str, float] = field(default_factory=dict)
+    # cross-step pipelining (cross_step=True): chained-DAG makespan + gain
+    pipeline: Optional[Dict[str, float]] = None
 
     @property
     def makespan(self) -> float:
@@ -37,6 +60,8 @@ class ReplayResult:
             "phase_steps": dict(self.phase_steps),
             "exposed_tags": dict(self.exposed_tags),
             "divergence": [dict(r) for r in self.divergence],
+            "overlap_stats": dict(self.overlap_stats),
+            "pipeline": dict(self.pipeline) if self.pipeline else None,
         }
 
 
@@ -55,20 +80,57 @@ class TraceReplayer:
                              "for exposed-tag attribution")
         self.sim = sim
 
-    def replay(self, lowered: List[LoweredStep]) -> ReplayResult:
-        phase_time = {"summarization": 0.0, "generation": 0.0}
-        phase_steps = {"summarization": 0, "generation": 0}
-        results = []
-        for ls in lowered:
-            r = self.sim.run(ls.commands)
-            phase_time[ls.phase] += r.makespan
-            phase_steps[ls.phase] += 1
-            results.append(r)
+    def replay(self, lowered: List[LoweredStep], *,
+               cross_step: bool = False) -> ReplayResult:
+        phase_time = {"summarization": 0.0, "generation": 0.0,
+                      "overlapped": 0.0}
+        phase_steps = {"summarization": 0, "generation": 0, "overlapped": 0}
+        results: List[SimResult] = []
+        streams: List[List] = []        # command stream charged per group
+        overlapped_groups = 0
+        serialized_time = 0.0           # back-to-back time of merged streams
+        merged_time = 0.0
+        for group in group_overlapped(lowered):
+            if len(group) == 1:
+                ls = group[0]
+                r = self.sim.run(ls.commands)
+                phase_time[ls.phase] += r.makespan
+                phase_steps[ls.phase] += 1
+                results.append(r)
+                streams.append(ls.commands)
+            else:
+                cmds = merge_streams([ls.commands for ls in group],
+                                     mode="parallel")
+                r = self.sim.run(cmds)
+                solo = sum(self.sim.run(ls.commands).makespan
+                           for ls in group)
+                overlapped_groups += 1
+                serialized_time += solo
+                merged_time += r.makespan
+                phase_time["overlapped"] += r.makespan
+                phase_steps["overlapped"] += 1
+                results.append(r)
+                streams.append(cmds)
         merged = merge_results(results)
+        overlap_stats = {
+            "groups": overlapped_groups,
+            "serialized_time": serialized_time,
+            "overlapped_time": merged_time,
+            "gain": serialized_time - merged_time,
+        }
+        pipeline = None
+        if cross_step and len(streams) > 1:
+            chained = self.sim.run(merge_streams(streams, mode="pipelined"))
+            pipeline = {"makespan": chained.makespan,
+                        "gain": merged.makespan - chained.makespan}
+            # the chained run is one coherent timeline: report its breakdown
+            # (phase_time keeps the unpipelined per-step attribution)
+            merged = chained
         exposed = merged.exposed_tag_time() if merged.trace else {}
         return ReplayResult(result=merged, phase_time=phase_time,
                             phase_steps=phase_steps, exposed_tags=exposed,
-                            divergence=divergence_report(lowered))
+                            divergence=divergence_report(lowered),
+                            overlap_stats=overlap_stats, pipeline=pipeline)
 
 
 def baseline_comparison(lowered: List[LoweredStep],

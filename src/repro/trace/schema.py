@@ -2,19 +2,21 @@
 
 A trace is one JSON object per line:
 
-  line 1:   {"type": "header", "version": 1, "arch": ..., "family": ...,
+  line 1:   {"type": "header", "version": 2, "arch": ..., "family": ...,
              "model": {num_layers, d_model, num_heads, num_kv_heads,
                        head_dim, d_ff, vocab_size},
              "serve": {max_slots, max_len, prefill_chunk, prefill_mode,
-                       admission, temperature, eos_token, seed}}
+                       admission, temperature, eos_token, seed,
+                       policy, sub_batch}}
   then, in engine-timeline order, any of:
     {"type": "request",  "step", "rid", "prompt_len", "max_new"}
     {"type": "admit",    "step", "wave": [[slot, rid, prompt_len], ...]}
     {"type": "prefill",  "step", "offset", "chunk", "valid", "kv",
-                         "slots": [...], "route": {phase_log_entry}}
+                         "slots": [...], "route": {phase_log_entry},
+                         "sub_batch": wave ordinal, "overlap": bool}
     {"type": "decode",   "step", "occupancy", "slot_lens": [per-slot len],
                          "slots": [...], "tokens": [[rid, tok], ...],
-                         "route": {phase_log_entry}}
+                         "route": {phase_log_entry}, "overlap": bool}
     {"type": "complete", "step", "rid", "reason", "n_generated"}
   last line: {"type": "summary", "dispatch_counts", "host_syncs",
               "prefill_stats"}
@@ -22,6 +24,17 @@ A trace is one JSON object per line:
 "prefill" and "decode" are the *schedulable* events: each lowers to one PAS
 command stream (see trace/lower.py). The header carries enough model shape
 to rebuild a ``ModelConfig`` for lowering without the original config module.
+
+Version history:
+  v1 — PR 2: serial wave loop only. No scheduling-policy fields.
+  v2 — scheduler subsystem: header.serve gains ``policy`` (the step-
+       composition policy that served the trace) and ``sub_batch``;
+       ``prefill`` events carry their admission-wave ordinal (``sub_batch``)
+       and an ``overlap`` flag (co-scheduled with the same step's decode);
+       ``decode`` events carry ``overlap``. Loading a v1 trace upgrades it
+       in place with serial-semantics defaults (policy="serial",
+       sub_batch=wave order not recoverable -> 0, overlap=False), so every
+       downstream consumer can rely on v2 keys.
 """
 from __future__ import annotations
 
@@ -31,7 +44,8 @@ from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 
 # required keys per event type (beyond "type")
 _REQUIRED: Dict[str, tuple] = {
@@ -43,37 +57,66 @@ _REQUIRED: Dict[str, tuple] = {
     "complete": ("step", "rid", "reason", "n_generated"),
     "summary": ("dispatch_counts", "host_syncs", "prefill_stats"),
 }
+# additional keys required from v2 on
+_REQUIRED_V2: Dict[str, tuple] = {
+    "prefill": ("sub_batch", "overlap"),
+    "decode": ("overlap",),
+}
 _MODEL_KEYS = ("num_layers", "d_model", "num_heads", "num_kv_heads",
                "head_dim", "d_ff", "vocab_size")
 _ROUTE_KEYS = ("phase", "tokens", "active", "gemv_path", "ffn_route")
+# serial-semantics defaults a v1 event upgrades with
+_V1_DEFAULTS: Dict[str, Dict[str, object]] = {
+    "prefill": {"sub_batch": 0, "overlap": False},
+    "decode": {"overlap": False},
+}
 
 
 class TraceSchemaError(ValueError):
     pass
 
 
-def validate_event(ev: dict) -> dict:
-    """Schema-validate one trace line; returns it unchanged on success."""
+def validate_event(ev: dict, version: int = SCHEMA_VERSION) -> dict:
+    """Schema-validate one trace line against the given schema version;
+    returns it unchanged on success."""
     if not isinstance(ev, dict) or "type" not in ev:
         raise TraceSchemaError(f"not a trace event: {ev!r}")
     t = ev["type"]
     if t not in _REQUIRED:
         raise TraceSchemaError(f"unknown event type {t!r}")
-    missing = [k for k in _REQUIRED[t] if k not in ev]
+    required = _REQUIRED[t]
+    if version >= 2:
+        required = required + _REQUIRED_V2.get(t, ())
+    missing = [k for k in required if k not in ev]
     if missing:
         raise TraceSchemaError(f"{t} event missing keys {missing}: {ev!r}")
     if t == "header":
-        if ev["version"] != SCHEMA_VERSION:
+        if ev["version"] not in SUPPORTED_VERSIONS:
             raise TraceSchemaError(
                 f"unsupported trace version {ev['version']} "
-                f"(supported: {SCHEMA_VERSION})")
+                f"(supported: {SUPPORTED_VERSIONS})")
         missing = [k for k in _MODEL_KEYS if k not in ev["model"]]
         if missing:
             raise TraceSchemaError(f"header.model missing {missing}")
+        if ev["version"] >= 2 and "policy" not in ev["serve"]:
+            raise TraceSchemaError("v2 header.serve missing 'policy'")
     if t in ("prefill", "decode"):
         missing = [k for k in _ROUTE_KEYS if k not in ev["route"]]
         if missing:
             raise TraceSchemaError(f"{t}.route missing {missing}")
+    return ev
+
+
+def upgrade_event(ev: dict, version: int) -> dict:
+    """Fill serial-semantics defaults into a pre-v2 event so downstream
+    consumers (lowering, replay grouping) can rely on the v2 keys."""
+    if version >= SCHEMA_VERSION:
+        return ev
+    for k, v in _V1_DEFAULTS.get(ev["type"], {}).items():
+        ev.setdefault(k, v)
+    if ev["type"] == "header":
+        ev["serve"].setdefault("policy", "serial")
+        ev["serve"].setdefault("sub_batch", 0)
     return ev
 
 
@@ -98,6 +141,10 @@ class Trace:
     events: List[dict] = field(default_factory=list)
     summary: Optional[dict] = None
 
+    @property
+    def version(self) -> int:
+        return self.header.get("version", SCHEMA_VERSION)
+
     def of_type(self, t: str) -> List[dict]:
         return [e for e in self.events if e["type"] == t]
 
@@ -107,11 +154,11 @@ class Trace:
         return [e for e in self.events if e["type"] in ("prefill", "decode")]
 
     def validate(self) -> "Trace":
-        validate_event(self.header)
+        validate_event(self.header, self.version)
         for e in self.events:
-            validate_event(e)
+            validate_event(e, self.version)
         if self.summary is not None:
-            validate_event(self.summary)
+            validate_event(self.summary, self.version)
         return self
 
     # ---- (de)serialization ------------------------------------------------ #
@@ -129,6 +176,7 @@ class Trace:
     @classmethod
     def loads(cls, text: str) -> "Trace":
         header, events, summary = None, [], None
+        version = SCHEMA_VERSION
         for ln, line in enumerate(text.splitlines(), 1):
             line = line.strip()
             if not line:
@@ -137,12 +185,15 @@ class Trace:
                 ev = json.loads(line)
             except json.JSONDecodeError as e:
                 raise TraceSchemaError(f"line {ln}: bad JSON ({e})") from e
-            validate_event(ev)
-            if ev["type"] == "header":
+            if isinstance(ev, dict) and ev.get("type") == "header":
+                # validate the header against its own declared version
+                validate_event(ev, ev.get("version", SCHEMA_VERSION))
                 if header is not None:
                     raise TraceSchemaError(f"line {ln}: duplicate header")
-                header = ev
+                version = ev["version"]
+                header = upgrade_event(ev, version)
                 continue
+            validate_event(ev, version)
             if header is None:
                 raise TraceSchemaError(
                     f"line {ln}: {ev['type']} before header")
@@ -150,6 +201,7 @@ class Trace:
                 raise TraceSchemaError(
                     f"line {ln}: {ev['type']} after summary "
                     f"(summary must be the last line)")
+            ev = upgrade_event(ev, version)
             if ev["type"] == "summary":
                 summary = ev
             else:
