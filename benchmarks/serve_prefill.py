@@ -1,4 +1,4 @@
-"""Prefill throughput: sequential teacher-forced vs batched flash prefill.
+"""Prefill throughput: sequential vs batched vs PACKED flash prefill.
 
 The paper's summarization stage is compute-bound and belongs on the batched
 GEMM path; the seed engine ran it through the generation path (one decode
@@ -7,14 +7,19 @@ serving engine itself:
 
     PYTHONPATH=src python benchmarks/serve_prefill.py
     PYTHONPATH=src python benchmarks/serve_prefill.py --seq 128 --slots 8
+    PYTHONPATH=src python benchmarks/serve_prefill.py --out prefill.json
 
 Prints prefill tokens/sec for both modes, the speedup, and the dispatch
 counts (B slots x S tokens must cost ceil(S/chunk) batched dispatches vs
-B*(S-1) sequential ones).
+B*(S-1) sequential ones) — then the short-prompt PACKED comparison: the
+same mixed short/long workload served with pack=False vs pack=True
+(valid-token fraction, prefill tok/s, dispatch count). ``--out`` writes the
+packed comparison as a JSON artifact for CI trend tracking.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -57,6 +62,57 @@ def time_prefill(cfg, params, mode, *, slots, seq, chunk, max_len, iters):
     return tokens / best, dispatches
 
 
+def _short_prompt_lengths(chunk: int, slots: int, waves: int, seed: int):
+    """The mixed short/long workload packing targets: per wave, one
+    2-chunk prompt, one full-chunk prompt, and pairs of half-chunk shorts —
+    unpacked pads every row to the longest prompt; packed collapses the
+    wave into one dense grid."""
+    rng = np.random.default_rng(seed)
+    lens = []
+    for _ in range(waves):
+        lens += [2 * chunk + 1, chunk + 1]
+        lens += [chunk // 2 + 1] * (slots - 2)
+    rng.shuffle(lens)
+    return lens
+
+
+def time_packed(cfg, params, pack, *, slots, chunk, max_len, iters, seed=0):
+    rng = np.random.default_rng(seed)
+    lens = _short_prompt_lengths(chunk, slots, waves=3, seed=seed)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+
+    def run():
+        eng = ServeEngine(cfg, params,
+                          ServeConfig(max_slots=slots, max_len=max_len,
+                                      prefill_chunk=chunk,
+                                      admission="fifo", pack=pack))
+        for p in prompts:
+            eng.add_request(p, max_new_tokens=1)
+        t0 = time.perf_counter()
+        while eng.queue or any(r is not None for r in eng.slot_req):
+            eng.step()
+        jax.block_until_ready(eng.cache)
+        return time.perf_counter() - t0, eng
+
+    run()                                    # warmup (compiles)
+    best, eng = None, None
+    for _ in range(iters):
+        dt, e = run()
+        if best is None or dt < best:
+            best, eng = dt, e
+    tokens = sum(n - 1 for n in lens)
+    st = eng.prefill_stats
+    return {
+        "pack": pack,
+        "prefill_tok_s": tokens / best,
+        "prefill_dispatches": eng.dispatch_counts["prefill"],
+        "valid_tokens": st["valid_tokens"],
+        "token_slots": st["token_slots"],
+        "valid_fraction": st["valid_tokens"] / st["token_slots"],
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -68,6 +124,8 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default=None,
+                    help="write the packed comparison as a JSON artifact")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -87,6 +145,29 @@ def main(argv=None):
               f"({dispatches} dispatches)")
     speedup = rows["batched"] / rows["sequential"]
     print(f"[prefill-bench] speedup: {speedup:.1f}x")
+
+    packed = {}
+    for pack in (False, True):
+        r = time_packed(cfg, params, pack, slots=args.slots,
+                        chunk=args.chunk, max_len=args.max_len,
+                        iters=args.iters)
+        packed["packed" if pack else "unpacked"] = r
+        print(f"[prefill-bench] {'packed' if pack else 'unpacked':>10}: "
+              f"{r['prefill_tok_s']:10.1f} prefill tok/s "
+              f"({r['prefill_dispatches']} dispatches, "
+              f"valid fraction {r['valid_fraction']:.3f})")
+    packed["speedup"] = (packed["packed"]["prefill_tok_s"]
+                         / packed["unpacked"]["prefill_tok_s"])
+    packed["dispatch_ratio"] = (packed["packed"]["prefill_dispatches"]
+                                / packed["unpacked"]["prefill_dispatches"])
+    print(f"[prefill-bench] packed speedup: {packed['speedup']:.2f}x, "
+          f"dispatches x{packed['dispatch_ratio']:.2f}")
+    if args.out:
+        art = {"arch": cfg.name, "slots": args.slots, "chunk": args.chunk,
+               "batched_vs_sequential_speedup": speedup, **packed}
+        with open(args.out, "w") as f:
+            json.dump(art, f, indent=2)
+        print(f"[prefill-bench] wrote {args.out}")
     return speedup
 
 

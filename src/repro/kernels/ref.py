@@ -38,6 +38,25 @@ def flash_attention_ref(q, k, v, causal: bool = True) -> jax.Array:
     return o.reshape(B, H, S, D).astype(q.dtype)
 
 
+def segment_attention_ref(q, k, v, q_pos, q_seg, kv_pos,
+                          kv_seg) -> jax.Array:
+    """Dense oracle for packed-prefill masking. q: (B,H,Sq,D); k,v:
+    (B,KH,Skv,D); q_pos/q_seg: (B,Sq); kv_pos/kv_seg: (B,Skv) int32.
+    A query attends a key iff they share a segment id and the key's
+    position does not exceed the query's (causal within the segment)."""
+    B, H, Sq, D = q.shape
+    KH = k.shape[1]
+    qg = q.reshape(B, KH, H // KH, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(D).astype(jnp.float32)
+    mask = ((q_seg[:, :, None] == kv_seg[:, None, :])
+            & (q_pos[:, :, None] >= kv_pos[:, None, :]))     # (B, Sq, Skv)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bkcd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
 def decode_attention_ref(q, k, v, lengths) -> jax.Array:
     """q: (B,H,D); k,v: (B,KH,S,D); lengths: (B,) valid prefix lengths."""
     B, H, D = q.shape

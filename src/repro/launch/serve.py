@@ -32,6 +32,15 @@ def main(argv=None):
     ap.add_argument("--policy", default="serial",
                     choices=["serial", "interleaved", "pim_aware"],
                     help="step-composition policy (repro.sched)")
+    ap.add_argument("--pack", action="store_true",
+                    help="pack several prompts per prefill chunk row "
+                         "(repro/sched/packing.py)")
+    ap.add_argument("--prefill-jobs", type=int, default=1,
+                    help="concurrent prefill sub-batches (interleaving "
+                         "policies)")
+    ap.add_argument("--decode-floor", type=int, default=0,
+                    help="defer decode below this ready-slot occupancy "
+                         "when a prefill chunk fills the step")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -43,7 +52,9 @@ def main(argv=None):
                                   max_len=args.max_len,
                                   prefill_mode=args.prefill_mode,
                                   prefill_chunk=args.prefill_chunk,
-                                  policy=args.policy))
+                                  policy=args.policy, pack=args.pack,
+                                  max_prefill_jobs=args.prefill_jobs,
+                                  decode_floor=args.decode_floor))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = args.prompt_len or int(rng.integers(2, 10))
@@ -63,8 +74,15 @@ def main(argv=None):
         print(f"[serve] PAS {phase}: {len(entries)} steps, "
               f"{gemv} on the GEMV (PIM-analogue) path")
     print(f"[serve] dispatches: {eng.dispatch_counts['prefill']} prefill "
-          f"({eng.effective_prefill_mode}), "
+          f"({eng.effective_prefill_mode}"
+          f"{', packed' if args.pack else ''}), "
           f"{eng.dispatch_counts['decode']} decode")
+    st = eng.prefill_stats
+    if st["token_slots"]:
+        print(f"[serve] prefill valid-token fraction: "
+              f"{st['valid_tokens'] / st['token_slots']:.3f}"
+              + (f", decode deferrals: {eng.decode_deferrals}"
+                 if eng.decode_deferrals else ""))
     stats = eng.scheduler.stats
     print(f"[serve] policy {eng.effective_policy}: "
           f"{stats['overlapped']} overlapped / {stats['serialized']} "

@@ -78,12 +78,19 @@ def out_project(p: dict, attn_out: jax.Array) -> jax.Array:
 # --------------------------------------------------------------------------- #
 def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool, chunk_q: int, chunk_kv: int,
-                        q_offset: int = 0, return_lse: bool = False):
+                        q_offset: int = 0, segment_info=None,
+                        return_lse: bool = False):
     """Online-softmax blocked attention.
 
     q: (B, H, Sq, hd); k, v: (B, KH, Skv, hd). GQA via head grouping.
     Scans over query blocks (outer) and KV blocks (inner); O(Sq/cq * Skv/ckv)
     loop nest with O(B*H*cq*ckv) live scores — 32k prefill fits on-chip.
+
+    ``segment_info`` = (q_pos (B,Sq), q_seg (B,Sq), kv_pos (B,Skv),
+    kv_seg (B,Skv)) int32 arrays switch the static causal/offset mask to the
+    packed-prefill rule: attend iff segments match and q_pos >= kv_pos (the
+    XLA twin of the Pallas kernel's ``segment_info`` mode, numerically
+    identical structure for CPU tests).
     """
     B, H, Sq, hd = q.shape
     KH, Skv = k.shape[1], k.shape[2]
@@ -102,6 +109,10 @@ def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ckv = _fit(Skv, chunk_kv)
     nq, nkv = Sq // cq, Skv // ckv
 
+    if segment_info is not None:
+        sq_pos, sq_seg, skv_pos, skv_seg = [
+            jnp.asarray(a, jnp.int32) for a in segment_info]
+
     # (B, KH, G, S, hd) grouped views
     qg = q.reshape(B, KH, G, Sq, hd)
 
@@ -109,13 +120,22 @@ def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
         qb = jax.lax.dynamic_slice_in_dim(qg, qi * cq, cq, axis=3)      # (B,KH,G,cq,hd)
         qb = qb.astype(jnp.float32) * scale
         q_pos = q_offset + qi * cq + jnp.arange(cq)
+        if segment_info is not None:
+            qp = jax.lax.dynamic_slice_in_dim(sq_pos, qi * cq, cq, 1)   # (B,cq)
+            qs = jax.lax.dynamic_slice_in_dim(sq_seg, qi * cq, cq, 1)
 
         def kv_block(acc, ki):
             o, m, l = acc
             kb = jax.lax.dynamic_slice_in_dim(k, ki * ckv, ckv, axis=2)  # (B,KH,ckv,hd)
             vb = jax.lax.dynamic_slice_in_dim(v, ki * ckv, ckv, axis=2)
             s = jnp.einsum("bkgqh,bkch->bkgqc", qb, kb.astype(jnp.float32))
-            if causal:
+            if segment_info is not None:
+                kp = jax.lax.dynamic_slice_in_dim(skv_pos, ki * ckv, ckv, 1)
+                ks = jax.lax.dynamic_slice_in_dim(skv_seg, ki * ckv, ckv, 1)
+                mask = ((qs[:, :, None] == ks[:, None, :])
+                        & (qp[:, :, None] >= kp[:, None, :]))   # (B,cq,ckv)
+                s = jnp.where(mask[:, None, None], s, NEG_INF)
+            elif causal:
                 kv_pos = ki * ckv + jnp.arange(ckv)
                 mask = q_pos[:, None] >= kv_pos[None, :]
                 s = jnp.where(mask[None, None, None], s, NEG_INF)
@@ -342,6 +362,142 @@ def attention_prefill_cached(cfg: ModelConfig, p: dict, x: jax.Array,
     out = out_project(p, o)
     new_cache.update(k=k_cache, v=v_cache)
     return out, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Packed serving prefill: one chunk ROW carries several prompts (or the tail
+# of a long one) — per-token (slot, position) K/V scatter, per-row cache
+# prefix gather, segment-masked flash attention
+# --------------------------------------------------------------------------- #
+def write_kv_packed(k_cache: jax.Array, v_cache: jax.Array,
+                    k_new: jax.Array, v_new: jax.Array,
+                    seg_slot: jax.Array, seg_pos: jax.Array,
+                    tok_valid: jax.Array):
+    """Scatter a PACKED chunk's K/V into the slot cache.
+
+    k_new/v_new: (R, KH, C, hd) — token j of lane r lands at cache row
+    ``seg_slot[r, j]``, position ``seg_pos[r, j]`` (the generalization of
+    ``write_kv_chunk``'s row-is-slot / position-is-offset+j layout; the
+    lane count R is decoupled from the cache's slot count). Invalid tokens
+    (padding between packed segments) are dropped. The packing planner
+    covers every prompt position exactly once, so no two tokens of one
+    dispatch scatter to the same (slot, position) cell."""
+    L = k_cache.shape[2]
+    pos = jnp.where(tok_valid, seg_pos, L)                  # (B, C): L drops
+    slot = jnp.where(tok_valid, seg_slot, 0)
+    k_cache = k_cache.at[slot, :, pos].set(
+        jnp.swapaxes(k_new, 1, 2).astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[slot, :, pos].set(
+        jnp.swapaxes(v_new, 1, 2).astype(v_cache.dtype), mode="drop")
+    return k_cache, v_cache
+
+
+def _write_scale_packed(scale_cache: jax.Array, scale_new: jax.Array,
+                        seg_slot: jax.Array, seg_pos: jax.Array,
+                        tok_valid: jax.Array) -> jax.Array:
+    """scale_cache: (B, KH, L); scale_new: (B, KH, C)."""
+    L = scale_cache.shape[2]
+    pos = jnp.where(tok_valid, seg_pos, L)
+    slot = jnp.where(tok_valid, seg_slot, 0)
+    return scale_cache.at[slot, :, pos].set(
+        jnp.swapaxes(scale_new, 1, 2), mode="drop")
+
+
+def attention_prefill_packed(cfg: ModelConfig, p: dict, x: jax.Array,
+                             cache: dict, seg_slot: jax.Array,
+                             seg_pos: jax.Array, seg_ids: jax.Array,
+                             tok_valid: jax.Array, row_slot: jax.Array,
+                             prefix_len: jax.Array, *, prefix_span: int):
+    """One PACKED prefill chunk against the slot cache.
+
+    x: (B, C, d) — row b carries one or more prompt segments laid out by the
+    packing planner: ``seg_slot``/``seg_pos`` (B, C) give each token's target
+    cache row and global position, ``seg_ids`` (B, C) its within-row segment
+    id (0 is reserved for the row's continuation segment — the tail of a
+    prompt whose earlier chunks are already cached — ids >= 1 are whole
+    prompts self-contained in the row, -1 padding). ``row_slot``/
+    ``prefix_len`` (B,) name the cache row and true extent of the row's
+    continuation prefix; ``prefix_span`` (static, a chunk multiple) is the
+    padded slice length the jit specializes on — the packed analogue of the
+    unpacked path's static per-chunk ``offset``.
+
+    K/V scatter to (seg_slot, seg_pos); attention runs over the
+    concatenation [gathered prefix rows ; chunk KV] under the segment mask:
+    continuation tokens (segment 0) attend prefix positions < prefix_len
+    plus their own earlier chunk tokens, whole prompts attend only within
+    their segment. Padding rows produce garbage outputs — callers discard
+    them; their cache writes are dropped."""
+    B, C, _ = x.shape
+    q, k_new, v_new = qkv_project(cfg, p, x, seg_pos)
+    new_cache = {}
+    if cfg.kv_dtype == "int8":
+        kq, ks = _quantize_kv(k_new)                        # scales (B, KH, C)
+        vq, vs = _quantize_kv(v_new)
+        k_cache, v_cache = write_kv_packed(cache["k"], cache["v"], kq, vq,
+                                           seg_slot, seg_pos, tok_valid)
+        k_sc = _write_scale_packed(cache["k_scale"], ks, seg_slot, seg_pos,
+                                   tok_valid)
+        v_sc = _write_scale_packed(cache["v_scale"], vs, seg_slot, seg_pos,
+                                   tok_valid)
+        new_cache.update(k_scale=k_sc, v_scale=v_sc)
+        # the chunk attends its own K/V through the same int8 round-trip the
+        # cache stores (numerical parity with later chunks reading the cache)
+        k_att_chunk = (kq.astype(jnp.bfloat16)
+                       * ks[..., None].astype(jnp.bfloat16))
+        v_att_chunk = (vq.astype(jnp.bfloat16)
+                       * vs[..., None].astype(jnp.bfloat16))
+    else:
+        k_cache, v_cache = write_kv_packed(cache["k"], cache["v"],
+                                           k_new, v_new,
+                                           seg_slot, seg_pos, tok_valid)
+        k_att_chunk, v_att_chunk = k_new, v_new
+    new_cache.update(k=k_cache, v=v_cache)
+
+    q_seg = jnp.where(tok_valid, seg_ids, -2)               # pad q matches 0 keys
+    kv_seg_chunk = jnp.where(tok_valid, seg_ids, -1)
+    if prefix_span > 0:
+        # per-row prefix: the continuation segment's cache row, sliced to the
+        # static span (>= every row's true prefix; the mask trims to
+        # prefix_len so freshly scattered chunk tokens are never re-read)
+        span = min(prefix_span, k_cache.shape[2])
+        k_pref = jnp.take(jax.lax.slice_in_dim(k_cache, 0, span, axis=2),
+                          row_slot, axis=0)
+        v_pref = jnp.take(jax.lax.slice_in_dim(v_cache, 0, span, axis=2),
+                          row_slot, axis=0)
+        if cfg.kv_dtype == "int8":
+            k_psc = jnp.take(jax.lax.slice_in_dim(k_sc, 0, span, axis=2),
+                             row_slot, axis=0)
+            v_psc = jnp.take(jax.lax.slice_in_dim(v_sc, 0, span, axis=2),
+                             row_slot, axis=0)
+            k_pref = (k_pref.astype(jnp.bfloat16)
+                      * k_psc[..., None].astype(jnp.bfloat16))
+            v_pref = (v_pref.astype(jnp.bfloat16)
+                      * v_psc[..., None].astype(jnp.bfloat16))
+        pref_pos = jnp.broadcast_to(jnp.arange(span)[None], (B, span))
+        pref_seg = jnp.where(pref_pos < prefix_len[:, None], 0, -1)
+        k_att = jnp.concatenate(
+            [k_pref.astype(k_att_chunk.dtype), k_att_chunk], axis=2)
+        v_att = jnp.concatenate(
+            [v_pref.astype(v_att_chunk.dtype), v_att_chunk], axis=2)
+        kv_pos = jnp.concatenate([pref_pos, seg_pos], axis=1)
+        kv_seg = jnp.concatenate([pref_seg, kv_seg_chunk], axis=1)
+    else:
+        k_att, v_att = k_att_chunk, v_att_chunk
+        kv_pos, kv_seg = seg_pos, kv_seg_chunk
+
+    seg_info = (seg_pos, q_seg, kv_pos, kv_seg)
+    Skv = k_att.shape[2]
+    bq, bkv = min(cfg.chunk_q, C), min(cfg.chunk_kv, Skv)
+    pallas_ok = cfg.use_pallas and C % bq == 0 and Skv % bkv == 0
+    if pallas_ok:
+        from repro.kernels.flash_attention import flash_attention
+        o = flash_attention(q, k_att, v_att, block_q=bq, block_kv=bkv,
+                            segment_info=seg_info)
+    else:
+        o = flash_attention_xla(q, k_att, v_att, causal=True,
+                                chunk_q=cfg.chunk_q, chunk_kv=cfg.chunk_kv,
+                                segment_info=seg_info)
+    return out_project(p, o), new_cache
 
 
 # --------------------------------------------------------------------------- #

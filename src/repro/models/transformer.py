@@ -435,6 +435,65 @@ def prefill_chunk(cfg: ModelConfig, params: dict, tokens: jax.Array,
     return new_cache
 
 
+def _apply_block_prefill_packed(cfg: ModelConfig, kind: Tuple[str, str],
+                                p: dict, x: jax.Array, cache: dict,
+                                seg_slot, seg_pos, seg_ids, tok_valid,
+                                row_slot, prefix_len, prefix_span: int):
+    """Packed chunk-of-prompts block. x: (B, C, d). Returns (x, new_cache)."""
+    mixer, ffn = kind
+    if mixer != "attn":
+        raise NotImplementedError(
+            "packed prefill covers attention mixers only")
+    new_cache = dict(cache)
+    h = L.apply_norm(cfg, p["norm1"], x)
+    kv_in = {k: cache[k] for k in ("k", "v", "k_scale", "v_scale")
+             if k in cache}
+    y, kv = A.attention_prefill_packed(cfg, p["attn"], h, kv_in,
+                                       seg_slot, seg_pos, seg_ids,
+                                       tok_valid, row_slot, prefix_len,
+                                       prefix_span=prefix_span)
+    new_cache.update(kv)
+    x = x + y
+    h = L.apply_norm(cfg, p["norm2"], x)
+    if ffn == "moe":
+        y, _ = M.apply_moe(cfg, p["ffn"], h)
+    else:
+        y = L.apply_mlp(cfg, p["ffn"], h)
+    return x + y, new_cache
+
+
+def prefill_chunk_packed(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                         cache: dict, seg_slot: jax.Array,
+                         seg_pos: jax.Array, seg_ids: jax.Array,
+                         tok_valid: jax.Array, row_slot: jax.Array,
+                         prefix_len: jax.Array, *, prefix_span: int):
+    """One PACKED batched-prefill dispatch: tokens (B, C) where each row
+    carries one or more prompt segments (see the packing planner,
+    repro/sched/packing.py). Per-token target (seg_slot, seg_pos) drives
+    the K/V scatter; ``seg_ids`` plus per-row (row_slot, prefix_len) drive
+    the segment-aware attention mask, so packed prompts only attend their
+    own KV prefix. ``prefix_span`` is static — one compiled variant per
+    padded prefix length, mirroring the unpacked path's per-offset jit.
+    Returns the new cache (packed prefill emits no logits, like
+    ``prefill_chunk``)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg.d_model)
+    kinds = _position_kinds(cfg)
+
+    def body(x, xs):
+        blk, cache_slice = xs
+        new_slice = {}
+        for j, kind in enumerate(kinds):
+            x, nc = _apply_block_prefill_packed(
+                cfg, kind, blk[f"pos{j}"], x, cache_slice[f"pos{j}"],
+                seg_slot, seg_pos, seg_ids, tok_valid, row_slot,
+                prefix_len, prefix_span)
+            new_slice[f"pos{j}"] = nc
+        return x, new_slice
+
+    _, new_cache = _loop_blocks(cfg, body, x, (params["blocks"], cache))
+    return new_cache
+
+
 # --------------------------------------------------------------------------- #
 # prefill that also fills the cache (serving path; not the dry-run prefill)
 # --------------------------------------------------------------------------- #

@@ -22,6 +22,11 @@ schema v2) so the simulator can score the overlapped command streams
 (``core.pas.merge_streams`` + ``trace.replay``).
 """
 from repro.sched.base import PrefillJob, Scheduler
+from repro.sched.packing import (
+    PackedDispatch,
+    PackedPrefillJob,
+    plan_packed_job,
+)
 from repro.sched.policies import (
     POLICY_NAMES,
     InterleavedScheduler,
@@ -32,6 +37,7 @@ from repro.sched.policies import (
 
 __all__ = [
     "PrefillJob", "Scheduler",
+    "PackedDispatch", "PackedPrefillJob", "plan_packed_job",
     "POLICY_NAMES", "InterleavedScheduler", "PimAwareScheduler",
     "SerialScheduler", "make_scheduler",
 ]

@@ -37,6 +37,7 @@ class PrefillJob:
     n_chunks: int
     sub_batch: int                      # wave ordinal (trace sub-batch id)
     next_chunk: int = 0
+    _wave_taken: bool = False
 
     @property
     def done(self) -> bool:
@@ -49,6 +50,16 @@ class PrefillJob:
             return 0
         c, C = self.next_chunk, self.chunk
         return int(self.valid[:, c * C:(c + 1) * C].sum())
+
+    def take_completed(self) -> List[Tuple[int, object]]:
+        """(slot, req) pairs whose prefill finished since the last call.
+        The unpacked layout fills every slot's row in lockstep, so the whole
+        wave completes with the final chunk; ``PackedPrefillJob`` overrides
+        this with per-dispatch completions."""
+        if self.done and not self._wave_taken:
+            self._wave_taken = True
+            return list(self.wave)
+        return []
 
 
 class Scheduler:

@@ -49,65 +49,107 @@ class SerialScheduler(Scheduler):
 
 
 class InterleavedScheduler(Scheduler):
-    """Overlap a prefill sub-batch with the resident batch's decode.
+    """Overlap prefill sub-batches with the resident batch's decode.
 
     Step composition (both phases present): dispatch the decode for every
     resident (fully prefilled) slot, start its async result copy, dispatch
-    the in-flight job's next prefill chunk while that copy is in flight,
+    one in-flight job's next prefill chunk while that copy is in flight,
     then resolve. One chunk per step keeps the summarization stream fed
     without stalling generation; ``sub_batch`` (ServeConfig) caps how many
-    free slots one wave claims."""
+    free slots one wave claims.
+
+    ``max_jobs`` > 1 admits a second sub-batch while the first is mid-flight
+    (two concurrent ``PrefillJob``s over DISJOINT slots — admission only
+    hands out free slots — with round-robin chunk dispatch), so the prefill
+    stream stays saturated under bursty arrivals instead of waiting for the
+    current wave to drain before the next one can start.
+
+    ``decode_floor`` > 0 arms the decode-occupancy guard: when a step has a
+    prefill chunk to dispatch but fewer than ``decode_floor`` decode-ready
+    slots, the decode is deferred ONE step and batched with the next step's
+    (the interleaving spreads completions out, so tiny-occupancy decode
+    dispatches pay full per-dispatch overhead for little work). Deferral
+    never changes tokens — greedy decode is slot-local — only when the
+    dispatch happens; ``engine.decode_deferrals`` counts them."""
 
     name = "interleaved"
 
-    def __init__(self, sub_batch: int = 0):
+    def __init__(self, sub_batch: int = 0, max_jobs: int = 1,
+                 decode_floor: int = 0):
         super().__init__()
         self.sub_batch = sub_batch
-        self.job: Optional[PrefillJob] = None
+        self.max_jobs = max(max_jobs, 1)
+        self.decode_floor = decode_floor
+        self.jobs: List[PrefillJob] = []
+        self._rr = 0                    # round-robin cursor over self.jobs
+        self._deferred_last = False     # guard defers at most one step
 
     # mapping-aware subclasses veto the overlap; base policy always takes it
-    def allow_overlap(self, engine) -> bool:
+    def allow_overlap(self, engine, job) -> bool:
         return True
 
-    def _start_job(self, engine) -> None:
-        if self.job is not None or not (engine.queue
-                                        and engine.free_slot_ids()):
-            return
-        # interleaving requires chunked prefill dispatches; the engine's
-        # effective_policy degrades SSM/hybrid/encdec stacks to serial
-        # before this scheduler is ever constructed
-        assert engine.effective_prefill_mode == "batched", \
-            "interleaving policies need the batched prefill path"
-        wave = engine.admit_wave(self.sub_batch or None)
-        if not wave:
-            return
-        job = engine.build_prefill_job(wave)
-        if job is None:                    # all-single-token prompts: no
-            engine.finish_prefill(wave)    # chunks to run, ready at once
-        else:
-            self.job = job
+    def _start_jobs(self, engine) -> None:
+        while (len(self.jobs) < self.max_jobs and engine.queue
+               and engine.free_slot_ids()):
+            # interleaving requires chunked prefill dispatches; the engine's
+            # effective_policy degrades SSM/hybrid/encdec stacks to serial
+            # before this scheduler is ever constructed
+            assert engine.effective_prefill_mode == "batched", \
+                "interleaving policies need the batched prefill path"
+            wave = engine.admit_wave(self.sub_batch or None)
+            if not wave:
+                return
+            job = engine.build_prefill_job(wave)
+            if job is None:                    # all-single-token prompts: no
+                engine.finish_prefill(wave)    # chunks to run, ready at once
+            else:
+                self.jobs.append(job)
 
-    def _advance_job(self, engine, overlap: bool) -> None:
-        job = self.job
+    def _current_job(self) -> Optional[PrefillJob]:
+        if not self.jobs:
+            return None
+        return self.jobs[self._rr % len(self.jobs)]
+
+    def _advance_job(self, engine, job, overlap: bool) -> None:
         engine.dispatch_prefill_chunk(job, overlap=overlap)
+        ready = job.take_completed()
+        if ready:                       # packed jobs arm slots per dispatch
+            engine.finish_prefill(ready)
         if job.done:
-            engine.finish_prefill(job.wave)
-            self.job = None
+            self.jobs.remove(job)
+        else:
+            self._rr += 1               # next step feeds the other job
+        if self.jobs:
+            self._rr %= len(self.jobs)
+        else:
+            self._rr = 0
 
     def step(self, engine) -> List[Tuple[int, int]]:
-        self._start_job(engine)
-        have_prefill = self.job is not None
-        co = have_prefill and engine.has_ready_slots() \
-            and self.allow_overlap(engine)
+        self._start_jobs(engine)
+        job = self._current_job()
+        have_prefill = job is not None
+        n_ready = len(engine.ready_slot_ids())
+        if (have_prefill and self.decode_floor > 0
+                and 0 < n_ready < self.decode_floor
+                and not self._deferred_last):
+            # occupancy below the floor and prefill work to hide behind:
+            # push the decode one step, batch it with the next step's
+            engine.decode_deferrals += 1
+            self._deferred_last = True
+            self._advance_job(engine, job, overlap=False)
+            self._tick("prefill_only")
+            return []
+        self._deferred_last = False
+        co = have_prefill and n_ready > 0 and self.allow_overlap(engine, job)
         pending = engine.dispatch_decode(overlap=co)
         if co:
             # the chunk dispatch rides inside the decode fetch window
-            self._advance_job(engine, overlap=True)
+            self._advance_job(engine, job, overlap=True)
             self._tick("overlapped")
             return engine.resolve_decode(pending)
         out = engine.resolve_decode(pending) if pending is not None else []
         if have_prefill:
-            self._advance_job(engine, overlap=False)
+            self._advance_job(engine, job, overlap=False)
             self._tick("serialized" if pending is not None else "prefill_only")
         elif pending is not None:
             self._tick("decode_only")
@@ -136,15 +178,16 @@ class PimAwareScheduler(InterleavedScheduler):
 
     def __init__(self, sub_batch: int = 0,
                  map_dims: Optional[Tuple[int, int]] = None,
-                 hw: HardwareModel = IANUS_HW):
-        super().__init__(sub_batch)
+                 hw: HardwareModel = IANUS_HW, max_jobs: int = 1,
+                 decode_floor: int = 0):
+        super().__init__(sub_batch, max_jobs, decode_floor)
         self.map_dims = map_dims
         self.hw = hw
         self.decision_log: List[dict] = []
 
-    def allow_overlap(self, engine) -> bool:
+    def allow_overlap(self, engine, job) -> bool:
         d_in, d_out = self.map_dims or (engine.cfg.d_model, engine.cfg.d_ff)
-        n_prefill = self.job.next_valid_count()
+        n_prefill = job.next_valid_count()
         n_decode = len(engine.ready_slot_ids())
         prefill_route = route_fc_tpu(max(n_prefill, 1), d_in, d_out, self.hw)
         decode_route = route_fc_tpu(max(n_decode, 1), d_in, d_out, self.hw)
@@ -168,13 +211,15 @@ POLICY_NAMES = tuple(_POLICIES)
 
 def make_scheduler(policy: str, *, sub_batch: int = 0,
                    map_dims: Optional[Tuple[int, int]] = None,
-                   hw: HardwareModel = IANUS_HW) -> Scheduler:
+                   hw: HardwareModel = IANUS_HW, max_jobs: int = 1,
+                   decode_floor: int = 0) -> Scheduler:
     """Policy factory (``ServeConfig.policy`` values)."""
     if policy == SerialScheduler.name:
         return SerialScheduler()
     if policy == InterleavedScheduler.name:
-        return InterleavedScheduler(sub_batch)
+        return InterleavedScheduler(sub_batch, max_jobs, decode_floor)
     if policy == PimAwareScheduler.name:
-        return PimAwareScheduler(sub_batch, map_dims, hw)
+        return PimAwareScheduler(sub_batch, map_dims, hw, max_jobs,
+                                 decode_floor)
     raise ValueError(
         f"unknown scheduling policy {policy!r} (have: {POLICY_NAMES})")

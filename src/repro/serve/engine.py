@@ -39,6 +39,14 @@ an arbitrary FIFO mix (``ServeConfig.admission = "fifo"`` restores arrival
 order; per-request greedy output is identical either way, only the dispatch
 schedule changes).
 
+Packed prefill (``ServeConfig.pack``): a wave's prompts are first-fit-
+decreasing packed into chunk *lanes* (several short prompts — or a long
+prompt's tail plus shorts — per row; repro/sched/packing.py), the dispatch
+grid shrinks to the lanes used, and the segment-masked kernel keeps the
+packing numerically invisible. Slots arm for generation as soon as their
+own prompt's last segment is cached (``PrefillJob.take_completed``), so
+short prompts in a packed wave start decoding before the wave drains.
+
 A ``repro.trace.TraceRecorder`` can be attached at construction to capture
 every request / admission / prefill-dispatch / decode-step / completion
 event — including each step's sub-batch membership and overlap flags — for
@@ -58,7 +66,8 @@ from repro.configs.base import ModelConfig
 from repro.core.pas import phase_log_entry
 from repro.models import transformer as T
 from repro.models.params import init_params
-from repro.sched import PrefillJob, make_scheduler
+from repro.sched import (PackedPrefillJob, PrefillJob, make_scheduler,
+                         plan_packed_job)
 
 
 @dataclass
@@ -83,6 +92,17 @@ def _jit_decode(cfg: ModelConfig):
 @functools.lru_cache(maxsize=None)
 def _jit_prefill(cfg: ModelConfig, offset: int):
     return jax.jit(functools.partial(T.prefill_chunk, cfg, offset=offset))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_prefill_packed(cfg: ModelConfig, prefix_span: int):
+    """One jitted packed prefill per padded prefix span (a chunk multiple);
+    jax.jit additionally specializes per row-count shape inside each entry.
+    Segment layout, positions and prefix extents are dynamic operands, so a
+    serve compiles at most max_slots * max_len/chunk packed variants — the
+    same order as the unpacked path's per-chunk-offset jits."""
+    return jax.jit(functools.partial(T.prefill_chunk_packed, cfg,
+                                     prefix_span=prefix_span))
 
 
 @functools.lru_cache(maxsize=None)
@@ -136,6 +156,20 @@ class ServeConfig:
     # copy asynchronously at dispatch so the step's co-scheduled prefill
     # chunk (and host bookkeeping) overlaps the transfer.
     double_buffer: bool = True
+    # packed prefill: first-fit-decreasing pack several short prompts (or a
+    # long prompt's tail plus short prompts) into each chunk row, so the
+    # per-dispatch valid-token fraction stays near 1 on mixed workloads
+    # (repro/sched/packing.py; batched prefill path only).
+    pack: bool = False
+    # how many PrefillJobs an interleaving scheduler keeps in flight over
+    # disjoint slots (round-robin chunk dispatch); >1 keeps the NPU prefill
+    # stream saturated under bursty arrivals.
+    max_prefill_jobs: int = 1
+    # decode-occupancy guard: during interleaved steps with a prefill chunk
+    # to dispatch, defer the decode by one step when fewer than this many
+    # slots are decode-ready, batching it with the next step's decode
+    # (0 = disabled; engine.decode_deferrals counts deferrals).
+    decode_floor: int = 0
 
 
 @dataclass
@@ -173,12 +207,16 @@ class ServeEngine:
         self._batched_ok = T.supports_batched_prefill(cfg)
         self.scheduler = make_scheduler(self.effective_policy,
                                         sub_batch=scfg.sub_batch,
-                                        map_dims=scfg.map_dims)
+                                        map_dims=scfg.map_dims,
+                                        max_jobs=scfg.max_prefill_jobs,
+                                        decode_floor=scfg.decode_floor)
         self.pas_log: List[dict] = []
         # dispatch accounting (benchmarks/serve_prefill.py reads this)
         self.dispatch_counts = {"prefill": 0, "decode": 0}
         self.host_syncs = 0           # blocking device->host transfers
         self.async_fetches = 0        # fetches whose copy started at dispatch
+        self.decode_deferrals = 0     # decode dispatches pushed one step by
+                                      # the occupancy guard (decode_floor)
         # padding-waste accounting for the batched prefill path:
         # token_slots = B*C rows computed per dispatch; valid = useful ones
         self.prefill_stats = {"token_slots": 0, "valid_tokens": 0}
@@ -296,8 +334,13 @@ class ServeEngine:
 
     def build_prefill_job(self, wave) -> Optional[PrefillJob]:
         """Lay a wave's prompt tokens out for chunked dispatch. None when
-        the wave has no cache tokens to write (all single-token prompts)."""
+        the wave has no cache tokens to write (all single-token prompts).
+        With ``pack=True`` the wave is first-fit-decreasing packed into
+        chunk rows (``plan_packed_job``) instead of one row per slot."""
         B, C = self.scfg.max_slots, self.scfg.prefill_chunk
+        if self.scfg.pack:
+            return plan_packed_job(wave, max_slots=B, chunk=C,
+                                   sub_batch=self.wave_count - 1)
         S = max(len(r.prompt) - 1 for _, r in wave)
         if S == 0:
             return None
@@ -322,6 +365,8 @@ class ServeEngine:
         """Run the job's next chunk through the batched flash prefill path.
         ``overlap=True`` marks the dispatch as co-scheduled with this step's
         decode (recorded in the trace; the replay merges the two streams)."""
+        if isinstance(job, PackedPrefillJob):
+            return self._dispatch_packed_chunk(job, overlap=overlap)
         c, C = job.next_chunk, job.chunk
         job.next_chunk += 1
         vc = job.valid[:, c * C:(c + 1) * C]
@@ -345,6 +390,38 @@ class ServeEngine:
                 valid=int(vc.sum()), kv=c * C + C,
                 slots=[int(s) for s, _ in job.wave if vc[s].any()],
                 route=entry, sub_batch=job.sub_batch, overlap=overlap)
+
+    def _dispatch_packed_chunk(self, job: PackedPrefillJob, *,
+                               overlap: bool = False) -> None:
+        """Run a PACKED dispatch: rows carry several prompts (or a long
+        prompt's tail plus short prompts); per-token (slot, pos) metadata
+        scatters K/V and drives the segment-aware attention mask. The grid
+        shrinks to exactly the lanes the plan uses, so ``token_slots``
+        counts what was computed, not max_slots rows. A
+        packed event has no single offset (each row sits elsewhere in its
+        prompts) so the trace records offset=-1 and the true packing."""
+        d = job.dispatches[job.next_chunk]
+        job.next_chunk += 1
+        C = job.chunk
+        fn = _jit_prefill_packed(self.cfg, d.prefix_span)
+        self.cache = fn(self.params, jnp.asarray(d.tokens), self.cache,
+                        jnp.asarray(d.seg_slot), jnp.asarray(d.seg_pos),
+                        jnp.asarray(d.seg_ids), jnp.asarray(d.valid),
+                        jnp.asarray(d.row_slot), jnp.asarray(d.prefix_len))
+        self.dispatch_counts["prefill"] += 1
+        self.prefill_stats["token_slots"] += d.token_slots
+        self.prefill_stats["valid_tokens"] += d.n_valid
+        slots = sorted({int(s) for s in d.seg_slot[d.valid]})
+        entry = phase_log_entry(
+            "summarization", d.n_valid, len(slots),
+            self.cfg.d_model, self.cfg.d_ff)
+        self.pas_log.append(entry)
+        if self.recorder is not None:
+            self.recorder.on_prefill(
+                self.step_idx, offset=-1, chunk=C, valid=d.n_valid,
+                kv=d.prefix_span + C, slots=slots, route=entry,
+                sub_batch=job.sub_batch, overlap=overlap,
+                packed=True, segments=d.segments, rows=d.rows)
 
     def finish_prefill(self, wave) -> None:
         """A wave's prompt is fully cached: arm the slots for generation
@@ -389,6 +466,11 @@ class ServeEngine:
                                                    self.lens)
                 self.lens = self.lens.at[slot].add(1)
                 self.dispatch_counts["prefill"] += 1
+                # each teacher-forced dispatch computes a (B, 1) grid with
+                # exactly one useful row — count it, or valid-token-fraction
+                # reports are silently wrong for SSM/hybrid fallback waves
+                self.prefill_stats["token_slots"] += self.scfg.max_slots
+                self.prefill_stats["valid_tokens"] += 1
             n_valid = max(len(req.prompt) - 1, 0)
             entry = phase_log_entry(
                 "summarization", n_valid, len(wave),

@@ -36,6 +36,7 @@ class LoweredStep:
     live_route: dict           # the engine's phase_log_entry for this event
     overlap: bool = False      # co-scheduled with the same step's other phase
     sub_batch: int = -1        # prefill sub-batch (admission wave) ordinal
+    packed: bool = False       # packed prefill dispatch (schema v3)
 
     def to_dict(self) -> dict:
         return {
@@ -45,6 +46,7 @@ class LoweredStep:
             "decisions": [decision_to_dict(d) for d in self.decisions],
             "live_route": dict(self.live_route),
             "overlap": self.overlap, "sub_batch": self.sub_batch,
+            "packed": self.packed,
         }
 
 
@@ -83,7 +85,8 @@ def trace_to_commands(trace: Trace, cfg: Optional[ModelConfig] = None,
                                decisions=decisions,
                                live_route=dict(ev["route"]),
                                overlap=bool(ev.get("overlap", False)),
-                               sub_batch=int(ev.get("sub_batch", -1))))
+                               sub_batch=int(ev.get("sub_batch", -1)),
+                               packed=bool(ev.get("packed", False))))
     return out
 
 

@@ -44,6 +44,9 @@ class TraceRecorder:
                 "eos_token": scfg.eos_token, "seed": scfg.seed,
                 "policy": engine.effective_policy,
                 "sub_batch": scfg.sub_batch,
+                "pack": scfg.pack,
+                "max_prefill_jobs": scfg.max_prefill_jobs,
+                "decode_floor": scfg.decode_floor,
             },
         }
 
@@ -60,11 +63,20 @@ class TraceRecorder:
 
     def on_prefill(self, step: int, *, offset: int, chunk: int, valid: int,
                    kv: int, slots: List[int], route: dict,
-                   sub_batch: int = 0, overlap: bool = False) -> None:
+                   sub_batch: int = 0, overlap: bool = False,
+                   packed: bool = False, segments: Optional[int] = None,
+                   rows: Optional[int] = None) -> None:
+        # unpacked layout: one row per dispatched slot, one segment per row
+        if segments is None:
+            segments = len(slots)
+        if rows is None:
+            rows = len(slots)
         self.events.append({"type": "prefill", "step": step,
                             "offset": offset, "chunk": chunk, "valid": valid,
                             "kv": kv, "slots": slots, "route": dict(route),
-                            "sub_batch": sub_batch, "overlap": overlap})
+                            "sub_batch": sub_batch, "overlap": overlap,
+                            "packed": packed, "segments": segments,
+                            "rows": rows})
 
     def on_decode(self, step: int, *, occupancy: int, slot_lens: List[int],
                   slots: List[int], tokens: List[Tuple[int, int]],
@@ -88,7 +100,8 @@ class TraceRecorder:
         return {"type": "summary",
                 "dispatch_counts": dict(e.dispatch_counts),
                 "host_syncs": e.host_syncs,
-                "prefill_stats": dict(e.prefill_stats)}
+                "prefill_stats": dict(e.prefill_stats),
+                "decode_deferrals": e.decode_deferrals}
 
     def to_trace(self) -> Trace:
         if self._header is None:

@@ -22,6 +22,13 @@ Two scheduler-era extensions:
     ROADMAP "trace-driven sim scenarios" item: ``pipeline`` reports the
     chained makespan and its gain over back-to-back composition, and the
     breakdown/utilization switch to the pipelined timeline.
+  * **Windowed pipelining** (``replay(..., cross_step=True, window=N)``):
+    one whole-trace DAG is O((steps * commands)^2)-ish to schedule — fine
+    at smoke dims, hostile at paper-scale dims over long traces. A window
+    bounds the DAG: consecutive steps are chained N at a time and the
+    windows compose back-to-back, so sim cost is O(steps/N) problems of
+    bounded size while prefetch still crosses every intra-window boundary
+    (only one in N boundaries loses its prefetch opportunity).
 """
 from __future__ import annotations
 
@@ -81,7 +88,8 @@ class TraceReplayer:
         self.sim = sim
 
     def replay(self, lowered: List[LoweredStep], *,
-               cross_step: bool = False) -> ReplayResult:
+               cross_step: bool = False,
+               window: Optional[int] = None) -> ReplayResult:
         phase_time = {"summarization": 0.0, "generation": 0.0,
                       "overlapped": 0.0}
         phase_steps = {"summarization": 0, "generation": 0, "overlapped": 0}
@@ -120,9 +128,27 @@ class TraceReplayer:
         }
         pipeline = None
         if cross_step and len(streams) > 1:
-            chained = self.sim.run(merge_streams(streams, mode="pipelined"))
+            if window and window < len(streams):
+                # bounded-DAG mode: chain N consecutive steps at a time,
+                # compose the windows back-to-back
+                parts = []
+                for i in range(0, len(streams), window):
+                    span = streams[i:i + window]
+                    if len(span) == 1:
+                        parts.append(self.sim.run(span[0]))
+                    else:
+                        parts.append(self.sim.run(
+                            merge_streams(span, mode="pipelined")))
+                chained = merge_results(parts)
+                n_windows = len(parts)
+            else:
+                chained = self.sim.run(merge_streams(streams,
+                                                     mode="pipelined"))
+                n_windows = 1
             pipeline = {"makespan": chained.makespan,
-                        "gain": merged.makespan - chained.makespan}
+                        "gain": merged.makespan - chained.makespan,
+                        "windows": n_windows,
+                        "window": window or len(streams)}
             # the chained run is one coherent timeline: report its breakdown
             # (phase_time keeps the unpipelined per-step attribution)
             merged = chained

@@ -2,18 +2,20 @@
 
 A trace is one JSON object per line:
 
-  line 1:   {"type": "header", "version": 2, "arch": ..., "family": ...,
+  line 1:   {"type": "header", "version": 3, "arch": ..., "family": ...,
              "model": {num_layers, d_model, num_heads, num_kv_heads,
                        head_dim, d_ff, vocab_size},
              "serve": {max_slots, max_len, prefill_chunk, prefill_mode,
                        admission, temperature, eos_token, seed,
-                       policy, sub_batch}}
+                       policy, sub_batch, pack, max_prefill_jobs,
+                       decode_floor}}
   then, in engine-timeline order, any of:
     {"type": "request",  "step", "rid", "prompt_len", "max_new"}
     {"type": "admit",    "step", "wave": [[slot, rid, prompt_len], ...]}
     {"type": "prefill",  "step", "offset", "chunk", "valid", "kv",
                          "slots": [...], "route": {phase_log_entry},
-                         "sub_batch": wave ordinal, "overlap": bool}
+                         "sub_batch": wave ordinal, "overlap": bool,
+                         "packed": bool, "segments": int, "rows": int}
     {"type": "decode",   "step", "occupancy", "slot_lens": [per-slot len],
                          "slots": [...], "tokens": [[rid, tok], ...],
                          "route": {phase_log_entry}, "overlap": bool}
@@ -35,6 +37,17 @@ Version history:
        in place with serial-semantics defaults (policy="serial",
        sub_batch=wave order not recoverable -> 0, overlap=False), so every
        downstream consumer can rely on v2 keys.
+  v3 — packed prefill + concurrent jobs: header.serve gains ``pack``,
+       ``max_prefill_jobs`` and ``decode_floor``; ``prefill`` events carry
+       ``packed`` (rows hold several prompts / a continuation tail),
+       ``segments`` (prompt segments in the dispatch) and ``rows`` (lanes
+       used). A packed event's ``offset`` is -1 (rows sit at different
+       positions of different prompts); ``valid`` is the TRUE packed token
+       count and ``kv`` the padded attended context (prefix span + chunk),
+       so lowering scores the dispatch the engine actually ran. Loading a
+       v1/v2 trace upgrades in place: packed=False, one segment per
+       dispatched slot (segments=rows=len(slots)), pack=False,
+       max_prefill_jobs=1, decode_floor=0.
 """
 from __future__ import annotations
 
@@ -44,8 +57,8 @@ from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 
-SCHEMA_VERSION = 2
-SUPPORTED_VERSIONS = (1, 2)
+SCHEMA_VERSION = 3
+SUPPORTED_VERSIONS = (1, 2, 3)
 
 # required keys per event type (beyond "type")
 _REQUIRED: Dict[str, tuple] = {
@@ -57,10 +70,13 @@ _REQUIRED: Dict[str, tuple] = {
     "complete": ("step", "rid", "reason", "n_generated"),
     "summary": ("dispatch_counts", "host_syncs", "prefill_stats"),
 }
-# additional keys required from v2 on
+# additional keys required from v2 / v3 on
 _REQUIRED_V2: Dict[str, tuple] = {
     "prefill": ("sub_batch", "overlap"),
     "decode": ("overlap",),
+}
+_REQUIRED_V3: Dict[str, tuple] = {
+    "prefill": ("packed", "segments", "rows"),
 }
 _MODEL_KEYS = ("num_layers", "d_model", "num_heads", "num_kv_heads",
                "head_dim", "d_ff", "vocab_size")
@@ -87,6 +103,8 @@ def validate_event(ev: dict, version: int = SCHEMA_VERSION) -> dict:
     required = _REQUIRED[t]
     if version >= 2:
         required = required + _REQUIRED_V2.get(t, ())
+    if version >= 3:
+        required = required + _REQUIRED_V3.get(t, ())
     missing = [k for k in required if k not in ev]
     if missing:
         raise TraceSchemaError(f"{t} event missing keys {missing}: {ev!r}")
@@ -100,6 +118,8 @@ def validate_event(ev: dict, version: int = SCHEMA_VERSION) -> dict:
             raise TraceSchemaError(f"header.model missing {missing}")
         if ev["version"] >= 2 and "policy" not in ev["serve"]:
             raise TraceSchemaError("v2 header.serve missing 'policy'")
+        if ev["version"] >= 3 and "pack" not in ev["serve"]:
+            raise TraceSchemaError("v3 header.serve missing 'pack'")
     if t in ("prefill", "decode"):
         missing = [k for k in _ROUTE_KEYS if k not in ev["route"]]
         if missing:
@@ -108,15 +128,27 @@ def validate_event(ev: dict, version: int = SCHEMA_VERSION) -> dict:
 
 
 def upgrade_event(ev: dict, version: int) -> dict:
-    """Fill serial-semantics defaults into a pre-v2 event so downstream
-    consumers (lowering, replay grouping) can rely on the v2 keys."""
+    """Fill older-semantics defaults into a pre-current event so downstream
+    consumers (lowering, replay grouping) can rely on the current keys."""
     if version >= SCHEMA_VERSION:
         return ev
-    for k, v in _V1_DEFAULTS.get(ev["type"], {}).items():
-        ev.setdefault(k, v)
-    if ev["type"] == "header":
-        ev["serve"].setdefault("policy", "serial")
-        ev["serve"].setdefault("sub_batch", 0)
+    if version < 2:
+        for k, v in _V1_DEFAULTS.get(ev["type"], {}).items():
+            ev.setdefault(k, v)
+        if ev["type"] == "header":
+            ev["serve"].setdefault("policy", "serial")
+            ev["serve"].setdefault("sub_batch", 0)
+    if version < 3:
+        if ev["type"] == "prefill":
+            # pre-packing layout: one row per dispatched slot, one segment
+            # per row — the counts downstream occupancy analysis relies on
+            ev.setdefault("packed", False)
+            ev.setdefault("segments", len(ev["slots"]))
+            ev.setdefault("rows", len(ev["slots"]))
+        elif ev["type"] == "header":
+            ev["serve"].setdefault("pack", False)
+            ev["serve"].setdefault("max_prefill_jobs", 1)
+            ev["serve"].setdefault("decode_floor", 0)
     return ev
 
 

@@ -1,0 +1,511 @@
+"""Packed prefill: segment-masked kernel, FFD planner, engine equivalence,
+concurrent jobs, decode-occupancy guard, schema v3, windowed pipelining."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.models import transformer as T
+from repro.models.attention import flash_attention_xla
+from repro.models.params import init_params
+from repro.sched import PackedPrefillJob, plan_packed_job
+from repro.serve import Request, ServeConfig, ServeEngine
+from repro.trace import (Trace, TraceRecorder, TraceReplayer,
+                         bursty_arrivals, drive, poisson_arrivals,
+                         trace_to_commands)
+
+KEY = jax.random.PRNGKey(0)
+POLICIES = ("serial", "interleaved", "pim_aware")
+FULL_DIMS = (2048, 8192)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_params(T.param_defs(cfg), KEY)
+    return cfg, params
+
+
+def _scfg(policy, **kw):
+    base = dict(max_slots=4, max_len=64, prefill_chunk=8, policy=policy,
+                map_dims=FULL_DIMS)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _serve(cfg, params, policy, arrivals, **kw):
+    rec = TraceRecorder()
+    eng = ServeEngine(cfg, params, _scfg(policy, **kw), recorder=rec)
+    results = drive(eng, arrivals)
+    return eng, rec, results
+
+
+# --------------------------------------------------------------------------- #
+# kernel: segment-aware masking (packed rows attend only within their segment)
+# --------------------------------------------------------------------------- #
+def _packed_layout():
+    """Two packed rows over a [prefix(8) ; chunk(8)] KV span.
+
+    row 0: continuation of slot A (4 tokens at global positions 8..11,
+           segment 0, prefix_len 6) + a whole 3-token prompt (segment 1)
+           + 1 padding column.
+    row 1: two whole prompts (3 + 4 tokens) + 1 padding column.
+    """
+    Sp, C = 8, 8
+    q_pos = np.array([[8, 9, 10, 11, 0, 1, 2, 0],
+                      [0, 1, 2, 0, 1, 2, 3, 0]], np.int32)
+    q_seg = np.array([[0, 0, 0, 0, 1, 1, 1, -2],
+                      [1, 1, 1, 2, 2, 2, 2, -2]], np.int32)
+    pref_pos = np.broadcast_to(np.arange(Sp, dtype=np.int32), (2, Sp)).copy()
+    prefix_len = np.array([6, 0], np.int32)
+    pref_seg = np.where(pref_pos < prefix_len[:, None], 0, -1).astype(np.int32)
+    kv_pos = np.concatenate([pref_pos, q_pos], axis=1)
+    kv_seg = np.concatenate(
+        [pref_seg, np.where(q_seg == -2, -1, q_seg)], axis=1)
+    return q_pos, q_seg, kv_pos, kv_seg
+
+
+@pytest.mark.parametrize("H,KH,D", [(4, 2, 32), (4, 4, 64)])
+def test_flash_attention_segment_mask(H, KH, D):
+    """Pallas kernel, segment mode: packed queries attend exactly their own
+    segment (same id, causal by position) — dense oracle comparison."""
+    q_pos, q_seg, kv_pos, kv_seg = _packed_layout()
+    B, Sq = q_pos.shape
+    Skv = kv_pos.shape[1]
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KH, Skv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KH, Skv, D), jnp.float32)
+    info = tuple(jnp.asarray(a) for a in (q_pos, q_seg, kv_pos, kv_seg))
+    got = flash_attention(q, k, v, block_q=4, block_kv=8,
+                          segment_info=info, interpret=True)
+    want = ref.segment_attention_ref(q, k, v, *info)
+    valid_q = q_seg >= 0                    # padding rows produce garbage
+    m = valid_q[:, None, :, None]
+    np.testing.assert_allclose(np.where(m, got, 0), np.where(m, want, 0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_xla_segment_twin():
+    """The XLA twin must match the Pallas kernel (and the oracle) under the
+    same segment mask — CPU tests exercise the twin, TPU runs the kernel."""
+    q_pos, q_seg, kv_pos, kv_seg = _packed_layout()
+    B, Sq = q_pos.shape
+    Skv = kv_pos.shape[1]
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, 4, Sq, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (B, 2, Skv, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (B, 2, Skv, 32), jnp.float32)
+    info = tuple(jnp.asarray(a) for a in (q_pos, q_seg, kv_pos, kv_seg))
+    twin = flash_attention_xla(q, k, v, causal=True, chunk_q=4, chunk_kv=8,
+                               segment_info=info)
+    kern = flash_attention(q, k, v, block_q=4, block_kv=8,
+                           segment_info=info, interpret=True)
+    want = ref.segment_attention_ref(q, k, v, *info)
+    valid_q = q_seg >= 0
+    m = valid_q[:, None, :, None]
+    np.testing.assert_allclose(np.where(m, twin, 0), np.where(m, want, 0),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.where(m, twin, 0), np.where(m, kern, 0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_segment_mask_matches_q_offset_when_unpacked():
+    """One segment per row at positions [offset, offset+Sq) must reproduce
+    the static q_offset path exactly — packing degenerates to unpacked."""
+    B, H, KH, Sq, Skv, off, D = 2, 4, 2, 8, 16, 8, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KH, Skv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KH, Skv, D), jnp.float32)
+    q_pos = np.broadcast_to(off + np.arange(Sq, dtype=np.int32), (B, Sq))
+    kv_pos = np.broadcast_to(np.arange(Skv, dtype=np.int32), (B, Skv))
+    ones_q = np.ones((B, Sq), np.int32)
+    ones_kv = np.ones((B, Skv), np.int32)
+    seg = flash_attention(q, k, v, block_q=4, block_kv=8,
+                          segment_info=(q_pos, ones_q, kv_pos, ones_kv),
+                          interpret=True)
+    static = flash_attention(q, k, v, causal=True, block_q=4, block_kv=8,
+                             q_offset=off, interpret=True)
+    np.testing.assert_allclose(seg, static, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# planner: first-fit-decreasing properties
+# --------------------------------------------------------------------------- #
+def _mk_wave(plens, slots=None):
+    rng = np.random.default_rng(0)
+    slots = slots or list(range(len(plens)))
+    return [(s, Request(rid=i, prompt=rng.integers(0, 100, p).astype(np.int32)))
+            for i, (s, p) in enumerate(zip(slots, plens))]
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_planner_properties(seed):
+    """Every prompt's prefill span covered exactly once at true positions;
+    no lane overflow; <=1 continuation per lane; pieces in non-decreasing
+    dispatch order; every request completes exactly once."""
+    rng = np.random.default_rng(seed)
+    B, C = int(rng.integers(2, 9)), int(rng.integers(4, 17))
+    n = int(rng.integers(1, 2 * B + 1))
+    plens = [int(rng.integers(1, 4 * C)) for _ in range(n)]
+    wave = _mk_wave(plens, slots=list(rng.permutation(max(n, B))[:n]))
+    job = plan_packed_job(wave, max_slots=B, chunk=C, sub_batch=0)
+    if all(p == 1 for p in plens):
+        assert job is None
+        return
+    assert isinstance(job, PackedPrefillJob)
+    covered = {}                       # (slot, pos) -> token
+    disp_of = {}                       # (slot, pos) -> dispatch index
+    completed = []
+    for di, d in enumerate(job.dispatches):
+        R, Cd = d.tokens.shape
+        assert Cd == C and d.rows <= B
+        assert R == d.rows             # grids shrink to the lanes used
+        seen_cont = set()
+        for r in range(R):
+            lane_valid = d.valid[r]
+            assert lane_valid.sum() <= C
+            for j in np.nonzero(lane_valid)[0]:
+                slot = int(d.seg_slot[r, j])
+                pos = int(d.seg_pos[r, j])
+                key = (slot, pos)
+                assert key not in covered, "position written twice"
+                covered[key] = int(d.tokens[r, j])
+                disp_of[key] = di
+            if d.prefix_len[r] > 0:
+                assert r not in seen_cont
+                seen_cont.add(r)
+                assert (d.seg_ids[r][lane_valid] == 0).any()
+                assert d.prefix_span >= int(d.prefix_len[r])
+        assert d.prefix_span % C == 0
+        completed.extend(d.completes)
+    # exact coverage of every prompt's prefill span
+    want = {}
+    for slot, req in wave:
+        for pos, tok in enumerate(req.prompt[:-1]):
+            want[(slot, pos)] = int(tok)
+    assert covered == want
+    # a prompt's pieces land in non-decreasing dispatch order (a later
+    # position never precedes an earlier one)
+    for slot, _req in wave:
+        seq = [disp_of[k] for k in sorted(disp_of) if k[0] == slot]
+        assert seq == sorted(seq)
+    # every admitted request completes exactly once, in dispatch order
+    assert sorted(s for s, _ in completed) == sorted(s for s, _ in wave)
+
+
+def test_planner_packs_short_prompts_densely():
+    """A wave of short prompts collapses into one small dense grid instead
+    of one sparse (max_slots, C) grid per chunk of the longest prompt."""
+    wave = _mk_wave([5, 5, 5, 5])
+    job = plan_packed_job(wave, max_slots=4, chunk=16, sub_batch=0)
+    assert job.n_chunks == 1
+    d = job.dispatches[0]
+    assert d.rows == 1                  # 4x4 tokens fit one 16-wide lane
+    assert d.n_valid == 16
+    assert d.n_valid / d.token_slots == 1.0
+    assert d.segments == 4
+
+
+def test_planner_chains_chunks_of_one_prompt_in_one_dispatch():
+    """Consecutive pieces of a multi-chunk prompt may share a dispatch (the
+    K/V scatter precedes the prefix gather inside the dispatch), so a
+    2-chunk prompt prefills in ONE dispatch on two lanes."""
+    wave = _mk_wave([13])               # prefill 12 = 8 + 4 with C=8
+    job = plan_packed_job(wave, max_slots=4, chunk=8, sub_batch=0)
+    assert job.n_chunks == 1
+    d = job.dispatches[0]
+    assert d.rows == 2
+    assert int(d.prefix_len.max()) == 8
+    assert d.prefix_span == 8
+    assert d.completes == [wave[0]]
+
+
+# --------------------------------------------------------------------------- #
+# engine: packed == unpacked greedy tokens under every policy (acceptance)
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def mixed_packed(setup):
+    cfg, params = setup
+    arrivals = poisson_arrivals(0.5, 24, vocab=cfg.vocab_size,
+                                prompt_len=(2, 40), max_new=(3, 8), seed=1)
+    out = {}
+    for pol in POLICIES:
+        for pack in (False, True):
+            out[(pol, pack)] = _serve(cfg, params, pol, arrivals, pack=pack)
+    return out
+
+
+def test_packed_matches_unpacked_all_policies(mixed_packed):
+    """Acceptance: packed prefill emits identical greedy tokens to the
+    unpacked path on a mixed short/long workload under all three
+    policies."""
+    base = mixed_packed[("serial", False)][2]
+    for key, (_e, _r, res) in mixed_packed.items():
+        assert res == base, f"tokens diverged for {key}"
+
+
+def test_packed_cuts_dispatches_and_raises_valid_fraction(mixed_packed):
+    """Packing must strictly reduce prefill dispatches and lift the
+    valid-token fraction on the mixed workload, for every policy."""
+    for pol in POLICIES:
+        un = mixed_packed[(pol, False)][0]
+        pk = mixed_packed[(pol, True)][0]
+        assert pk.dispatch_counts["prefill"] < un.dispatch_counts["prefill"]
+
+        def frac(e):
+            s = e.prefill_stats
+            return s["valid_tokens"] / s["token_slots"]
+        assert frac(pk) > frac(un)
+        # same total valid tokens served either way
+        assert (pk.prefill_stats["valid_tokens"]
+                == un.prefill_stats["valid_tokens"])
+
+
+def test_short_prompt_packed_valid_fraction(setup):
+    """Acceptance: on the short-prompt workload the packed valid-token
+    fraction reaches >= 0.9 with measurably fewer prefill dispatches
+    (a long prompt's chunks and the wave's shorts collapse into one
+    dense grid per wave)."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, p).astype(np.int32)
+               for p in (17, 9, 5, 5, 17, 9, 5, 5)]
+    engines = {}
+    for pack in (False, True):
+        eng = ServeEngine(cfg, params,
+                          ServeConfig(max_slots=4, max_len=64,
+                                      prefill_chunk=8, admission="fifo",
+                                      pack=pack))
+        for p in prompts:
+            eng.add_request(p, max_new_tokens=2)
+        engines[pack] = (eng, eng.run_until_done())
+    assert engines[True][1] == engines[False][1]
+    st = engines[True][0].prefill_stats
+    assert st["valid_tokens"] / st["token_slots"] >= 0.9
+    assert (engines[True][0].dispatch_counts["prefill"]
+            < engines[False][0].dispatch_counts["prefill"])
+
+
+def test_packed_int8_cache_matches_unpacked(setup):
+    """The packed scatter/gather honours the int8 KV cache round-trip."""
+    cfg, _ = setup
+    import dataclasses
+    cfg8 = dataclasses.replace(cfg, kv_dtype="int8")
+    params = init_params(T.param_defs(cfg8), KEY)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg8.vocab_size, p).astype(np.int32)
+               for p in (5, 17, 2, 11)]
+    res = {}
+    for pack in (False, True):
+        eng = ServeEngine(cfg8, params,
+                          ServeConfig(max_slots=4, max_len=64,
+                                      prefill_chunk=8, pack=pack))
+        for p in prompts:
+            eng.add_request(p, max_new_tokens=4)
+        res[pack] = eng.run_until_done()
+    assert res[True] == res[False]
+
+
+# --------------------------------------------------------------------------- #
+# concurrent prefill jobs + decode-occupancy guard
+# --------------------------------------------------------------------------- #
+def test_two_prefill_jobs_in_flight_disjoint_slots(setup):
+    """max_prefill_jobs=2: the scheduler admits a second sub-batch while
+    the first is mid-flight; the two jobs never share a slot and tokens
+    match the single-job serve."""
+    cfg, params = setup
+    arrivals = poisson_arrivals(0.9, 16, vocab=cfg.vocab_size,
+                                prompt_len=(10, 40), max_new=(2, 5), seed=6)
+    _e1, _r1, one = _serve(cfg, params, "interleaved", arrivals,
+                           sub_batch=2, max_prefill_jobs=1)
+    eng = ServeEngine(cfg, params,
+                      _scfg("interleaved", sub_batch=2, max_prefill_jobs=2))
+    seen_two = 0
+    pending = sorted(arrivals, key=lambda a: a.step)
+    results, i = {}, 0
+    for _ in range(10_000):
+        while i < len(pending) and pending[i].step <= eng.step_idx:
+            eng.add_request(pending[i].prompt, pending[i].max_new)
+            i += 1
+        if i >= len(pending) and not eng.queue \
+                and all(r is None for r in eng.slot_req):
+            break
+        for rid, tok in eng.step():
+            results.setdefault(rid, []).append(tok)
+        jobs = eng.scheduler.jobs
+        if len(jobs) >= 2:
+            seen_two += 1
+            sets = [set(s for s, _ in j.wave) for j in jobs]
+            assert not (sets[0] & sets[1]), "jobs share a slot"
+    assert seen_two > 0                 # second sub-batch really in flight
+    assert results == one
+
+
+def test_decode_occupancy_guard_defers_and_preserves_tokens(setup):
+    """decode_floor defers low-occupancy decode dispatches by one step,
+    batching them with the next step's decode — fewer decode dispatches for
+    identical tokens; the engine exposes the deferral count."""
+    cfg, params = setup
+    arrivals = poisson_arrivals(0.4, 20, vocab=cfg.vocab_size,
+                                prompt_len=(8, 36), max_new=(3, 6), seed=8)
+    eng0, _r0, base = _serve(cfg, params, "interleaved", arrivals)
+    eng1, _r1, guarded = _serve(cfg, params, "interleaved", arrivals,
+                                decode_floor=3)
+    assert base == guarded
+    assert eng0.decode_deferrals == 0
+    assert eng1.decode_deferrals > 0
+    assert eng1.dispatch_counts["decode"] < eng0.dispatch_counts["decode"]
+    # same generated tokens, fewer dispatches => higher mean occupancy
+    n_tok = sum(len(v) for v in base.values())
+    assert (n_tok / eng1.dispatch_counts["decode"]
+            > n_tok / eng0.dispatch_counts["decode"])
+
+
+# --------------------------------------------------------------------------- #
+# schema v3 round-trip + packed lowering
+# --------------------------------------------------------------------------- #
+def _downgrade_to_v2(trace: Trace) -> str:
+    """Strip the v3 fields a PR-3-era recorder would not have written."""
+    header = json.loads(json.dumps(trace.header))
+    header["version"] = 2
+    for k in ("pack", "max_prefill_jobs", "decode_floor"):
+        header["serve"].pop(k, None)
+    lines = [json.dumps(header)]
+    for e in trace.events:
+        e = dict(e)
+        for k in ("packed", "segments", "rows"):
+            e.pop(k, None)
+        lines.append(json.dumps(e))
+    if trace.summary is not None:
+        lines.append(json.dumps(trace.summary))
+    return "\n".join(lines) + "\n"
+
+
+def test_schema_v3_records_packing(mixed_packed, setup, tmp_path):
+    tr = mixed_packed[("interleaved", True)][1].to_trace()
+    assert tr.version == 3
+    assert tr.header["serve"]["pack"] is True
+    pf = tr.of_type("prefill")
+    assert all(e["packed"] and e["offset"] == -1 for e in pf)
+    # a wave of shorts really packs: more segments than rows in one event
+    cfg, params = setup
+    rec2 = TraceRecorder()
+    eng2 = ServeEngine(cfg, params, _scfg("serial", pack=True),
+                       recorder=rec2)
+    rng = np.random.default_rng(13)
+    for p in (9, 5, 5):
+        eng2.add_request(rng.integers(0, cfg.vocab_size, p), 2)
+    eng2.run_until_done()
+    packed_evs = rec2.to_trace().of_type("prefill")
+    assert any(e["segments"] > e["rows"] for e in packed_evs)
+    # round trip through disk
+    p = tmp_path / "packed.jsonl"
+    tr.save(p)
+    again = Trace.load(p)
+    assert again.events == tr.events
+    # lowering carries the true packed token count
+    lowered = trace_to_commands(again)
+    packed_steps = [ls for ls in lowered if ls.packed]
+    assert packed_steps
+    by_idx = {ls.index: ls for ls in lowered}
+    for i, ev in enumerate(tr.schedulable):
+        if ev["type"] == "prefill":
+            assert by_idx[i].n_tokens == max(ev["valid"], 1)
+
+
+def test_schema_v2_loads_and_upgrades_to_v3(mixed_packed):
+    """Back-compat: a v2 (PR-3 era) trace loads with one-segment-per-slot
+    defaults and lowers to the same command streams as its v3 twin."""
+    tr3 = mixed_packed[("interleaved", False)][1].to_trace()
+    v2 = Trace.loads(_downgrade_to_v2(tr3))
+    assert v2.version == 2
+    assert v2.header["serve"]["pack"] is False          # upgraded default
+    assert v2.header["serve"]["max_prefill_jobs"] == 1
+    for e in v2.of_type("prefill"):
+        assert e["packed"] is False
+        assert e["segments"] == e["rows"] == len(e["slots"])
+    l2 = trace_to_commands(v2)
+    l3 = trace_to_commands(Trace.loads(tr3.dumps()))
+    assert len(l2) == len(l3)
+    for a, b in zip(l2, l3):
+        assert a.commands == b.commands
+    # a v3 trace missing its required v3 keys is rejected
+    bad = dict(next(e for e in tr3.events if e["type"] == "prefill"))
+    bad.pop("packed")
+    from repro.trace import TraceSchemaError
+    with pytest.raises(TraceSchemaError):
+        Trace.loads(json.dumps(tr3.header) + "\n" + json.dumps(bad))
+
+
+# --------------------------------------------------------------------------- #
+# replay: packed bursty trace beats the PR-3 interleaved baseline
+# --------------------------------------------------------------------------- #
+def test_packed_bursty_replay_beats_unpacked_baseline(setup):
+    """Acceptance: on a bursty trace, packing + a second in-flight job
+    replays to a smaller makespan than the PR-3 interleaved baseline at
+    paper-scale dims (denser dispatches, fewer per-dispatch overheads)."""
+    cfg, params = setup
+    full = get_arch("llama3.2-1b")
+    arrivals = bursty_arrivals(0.6, 30, vocab=cfg.vocab_size, burst=5,
+                               idle=10, prompt_len=(2, 40), max_new=(2, 6),
+                               seed=9)
+    reps, engines = {}, {}
+    for name, kw in (("baseline", dict()),
+                     ("packed", dict(pack=True, max_prefill_jobs=2,
+                                     sub_batch=2))):
+        eng, rec, res = _serve(cfg, params, "interleaved", arrivals, **kw)
+        engines[name] = (eng, res)
+        lowered = trace_to_commands(rec.to_trace(), cfg=full)
+        reps[name] = TraceReplayer().replay(lowered)
+    assert engines["packed"][1] == engines["baseline"][1]
+    assert reps["packed"].makespan < reps["baseline"].makespan
+
+
+def test_windowed_cross_step_pipelining(setup):
+    """window=N chains steps in bounded windows: cost-bounded DAGs whose
+    composed makespan sits between back-to-back and whole-trace
+    pipelining."""
+    cfg, params = setup
+    arrivals = poisson_arrivals(0.5, 12, vocab=cfg.vocab_size,
+                                prompt_len=(2, 24), max_new=(2, 5), seed=11)
+    _e, rec, _r = _serve(cfg, params, "serial", arrivals)
+    lowered = trace_to_commands(rec.to_trace())
+    rep = TraceReplayer()
+    flat = rep.replay(lowered)
+    whole = rep.replay(lowered, cross_step=True)
+    win = rep.replay(lowered, cross_step=True, window=3)
+    n_streams = len(lowered)            # serial trace: singleton groups
+    assert win.pipeline["windows"] == -(-n_streams // 3)
+    assert whole.pipeline["windows"] == 1
+    assert win.pipeline["gain"] > 0
+    # bounded windows give up only the cross-window prefetch edges
+    assert win.makespan < flat.makespan
+    assert whole.makespan <= win.makespan * 1.001
+
+
+# --------------------------------------------------------------------------- #
+# sequential-fallback stats fix
+# --------------------------------------------------------------------------- #
+def test_sequential_prefill_updates_stats():
+    """SSM/hybrid fallback waves must count their dispatches in
+    prefill_stats, or valid-token-fraction reports divide by zero / lie."""
+    cfg = get_arch("rwkv6-7b").reduced()
+    params = init_params(T.param_defs(cfg), KEY)
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(max_slots=2, max_len=32, prefill_chunk=8))
+    rng = np.random.default_rng(12)
+    plens = (5, 3)
+    for p in plens:
+        eng.add_request(rng.integers(0, cfg.vocab_size, p), max_new_tokens=2)
+    eng.run_until_done()
+    n_tok = sum(p - 1 for p in plens)
+    assert eng.prefill_stats["valid_tokens"] == n_tok
+    assert eng.prefill_stats["token_slots"] == n_tok * 2   # (B=2, 1) grids
+    assert eng.dispatch_counts["prefill"] == n_tok
