@@ -1,0 +1,111 @@
+"""Dispatch-count regression guard for the serving engine.
+
+Serves a fixed, fully deterministic smoke workload (seeded arrivals,
+termination by generation budget only — so the dispatch schedule does not
+depend on floating-point token values) with packing, fused overlapped
+steps and decode supersteps enabled, then compares the engine's total
+dispatch count and host-sync count against a recorded baseline:
+
+    PYTHONPATH=src python benchmarks/dispatch_guard.py            # check
+    PYTHONPATH=src python benchmarks/dispatch_guard.py --record   # rebase
+
+Exits non-zero when either count EXCEEDS the baseline — the cheap canary
+for reintroducing per-token launch overhead (an accidental extra dispatch
+or host round-trip per step shows up here long before a wall-clock bench
+notices). Counts below the baseline print a hint to re-record.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serve import ServeConfig, ServeEngine
+from repro.trace import drive, poisson_arrivals
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "data",
+                                "dispatch_baseline.json")
+
+# the guarded workload — change it and the baseline must be re-recorded
+WORKLOAD = dict(rate=0.5, horizon=32, prompt_len=(2, 40), max_new=(3, 10),
+                seed=7)
+SERVE = dict(max_slots=4, max_len=64, prefill_chunk=8, policy="interleaved",
+             pack=True, fuse=True, superstep=4, map_dims=(2048, 8192))
+
+
+def run_workload():
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(**SERVE))
+    arrivals = poisson_arrivals(WORKLOAD["rate"], WORKLOAD["horizon"],
+                                vocab=cfg.vocab_size,
+                                prompt_len=WORKLOAD["prompt_len"],
+                                max_new=WORKLOAD["max_new"],
+                                seed=WORKLOAD["seed"])
+    results = drive(eng, arrivals)
+    tokens = sum(len(v) for v in results.values())
+
+    def jsonable(d):
+        return {k: list(v) if isinstance(v, tuple) else v
+                for k, v in d.items()}
+
+    return {
+        "workload": {**jsonable(WORKLOAD), "serve": jsonable(SERVE)},
+        "requests": len(results),
+        "tokens": tokens,
+        "dispatch_counts": dict(eng.dispatch_counts),
+        "total_dispatches": sum(eng.dispatch_counts.values()),
+        "host_syncs": eng.host_syncs,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--record", action="store_true",
+                    help="write the current counts as the new baseline")
+    args = ap.parse_args(argv)
+
+    cur = run_workload()
+    print(f"[dispatch-guard] {cur['requests']} requests, "
+          f"{cur['tokens']} tokens: {cur['total_dispatches']} dispatches "
+          f"{cur['dispatch_counts']}, {cur['host_syncs']} host syncs")
+    if args.record:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(cur, f, indent=2)
+        print(f"[dispatch-guard] recorded baseline -> {args.baseline}")
+        return 0
+    with open(args.baseline) as f:
+        base = json.load(f)
+    if base["workload"] != cur["workload"]:
+        print("[dispatch-guard] FAIL: workload definition changed — "
+              "re-record the baseline (--record)")
+        return 1
+    failures = []
+    for key in ("total_dispatches", "host_syncs"):
+        if cur[key] > base[key]:
+            failures.append(f"{key} {cur[key]} > baseline {base[key]}")
+        elif cur[key] < base[key]:
+            print(f"[dispatch-guard] {key} improved: {cur[key]} < "
+                  f"baseline {base[key]} (consider --record)")
+    if failures:
+        print("[dispatch-guard] FAIL: " + "; ".join(failures))
+        return 1
+    print("[dispatch-guard] OK: within baseline "
+          f"(dispatches {base['total_dispatches']}, "
+          f"host_syncs {base['host_syncs']})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

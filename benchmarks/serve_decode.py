@@ -1,0 +1,204 @@
+"""Decode throughput vs superstep length (+ fused overlapped steps).
+
+Small-model generation is launch-overhead-bound: every decode step pays a
+full dispatch + host round-trip for one memory-bound GEMV round. Decode
+SUPERSTEPS (``ServeConfig.superstep=k``) run k steps inside one dispatch
+(``lax.scan`` with on-device sampling/termination) and resolve one host
+fetch per superstep, so dispatches-per-token drop to ~1/k:
+
+    PYTHONPATH=src python benchmarks/serve_decode.py
+    PYTHONPATH=src python benchmarks/serve_decode.py --out serve_decode.json
+
+For each superstep in {1, 2, 4, 8} the pure-decode phase of a fixed
+workload (llama3.2-1b smoke dims) is timed: decode tok/s, decode
+dispatches, dispatches per decode round, and host syncs. A second section
+compares an overlapped interleaved workload served with separate
+dispatches (fuse=False) vs single fused dispatches (fuse=True). ``--out``
+writes a JSON artifact for CI trend tracking.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serve import ServeConfig, ServeEngine
+from repro.trace import drive, poisson_arrivals
+
+
+def time_superstep(cfg, params, k, *, slots, prompt_len, max_new, max_len,
+                   chunk, iters):
+    """Prefill a full batch, then time the pure-decode phase at superstep
+    k. Returns decode tok/s plus the dispatch/sync accounting."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(slots)]
+
+    def run():
+        eng = ServeEngine(cfg, params,
+                          ServeConfig(max_slots=slots, max_len=max_len,
+                                      prefill_chunk=chunk, superstep=k))
+        for p in prompts:
+            eng.add_request(p, max_new_tokens=max_new)
+        eng._admit()                       # prefill everything up front
+        jax.block_until_ready(eng.cache)
+        d0 = eng.dispatch_counts["decode"]
+        s0 = eng.host_syncs
+        t0 = time.perf_counter()
+        results = eng.run_until_done()
+        jax.block_until_ready(eng.cache)
+        dt = time.perf_counter() - t0
+        tokens = sum(len(v) for v in results.values())
+        return dt, tokens, eng.dispatch_counts["decode"] - d0, \
+            eng.host_syncs - s0, results
+
+    run()                                  # warmup (compiles)
+    best = None
+    for _ in range(iters):
+        dt, tokens, dispatches, syncs, results = run()
+        if best is None or dt < best[0]:
+            best = (dt, tokens, dispatches, syncs, results)
+    dt, tokens, dispatches, syncs, results = best
+    # a decode round emits one token per active slot; with equal budgets the
+    # pure-decode phase is max_new rounds — dispatches/round is the 1/k claim
+    rounds = max_new
+    return {
+        "superstep": k,
+        "decode_tok_s": tokens / dt,
+        "decode_tokens": tokens,
+        "decode_dispatches": dispatches,
+        "dispatches_per_round": dispatches / rounds,
+        "host_syncs": syncs,
+        "results": results,
+    }
+
+
+def time_fused(cfg, params, fuse, *, slots, max_len, chunk, iters, seed=0):
+    """Overlapped interleaved workload served with two-dispatch overlapped
+    steps (fuse=False) vs single fused dispatches (fuse=True)."""
+    arrivals = poisson_arrivals(0.6, 24, vocab=cfg.vocab_size,
+                                prompt_len=(4, 3 * chunk),
+                                max_new=(4, 12), seed=seed)
+
+    def run():
+        eng = ServeEngine(cfg, params,
+                          ServeConfig(max_slots=slots, max_len=max_len,
+                                      prefill_chunk=chunk,
+                                      policy="interleaved", fuse=fuse))
+        t0 = time.perf_counter()
+        results = drive(eng, arrivals)
+        jax.block_until_ready(eng.cache)
+        return time.perf_counter() - t0, eng, results
+
+    run()                                  # warmup (compiles)
+    best, eng, results = None, None, None
+    for _ in range(iters):
+        dt, e, r = run()
+        if best is None or dt < best:
+            best, eng, results = dt, e, r
+    tokens = sum(len(v) for v in results.values())
+    total = sum(eng.dispatch_counts.values())
+    return {
+        "fuse": fuse,
+        "tok_s": tokens / best,
+        "dispatches": dict(eng.dispatch_counts),
+        "total_dispatches": total,
+        "fused_steps": eng.scheduler.stats["fused"],
+        "overlapped_steps": eng.scheduler.stats["overlapped"],
+        "results": results,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (default: .reduced() smoke dims)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--supersteps", type=int, nargs="+",
+                    default=[1, 2, 4, 8])
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default=None,
+                    help="write the comparison as a JSON artifact")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
+
+    print(f"[decode-bench] arch={cfg.name} slots={args.slots} "
+          f"prompt={args.prompt_len} max_new={args.max_new}")
+    rows = []
+    base_results = None
+    for k in args.supersteps:
+        r = time_superstep(cfg, params, k, slots=args.slots,
+                           prompt_len=args.prompt_len, max_new=args.max_new,
+                           max_len=args.max_len, chunk=args.chunk,
+                           iters=args.iters)
+        results = r.pop("results")
+        if base_results is None:
+            base_results = results
+        elif results != base_results:
+            raise AssertionError(f"superstep={k} changed greedy tokens")
+        rows.append(r)
+        print(f"[decode-bench] superstep={k}: "
+              f"{r['decode_tok_s']:10.1f} decode tok/s, "
+              f"{r['decode_dispatches']} dispatches "
+              f"({r['dispatches_per_round']:.3f}/round), "
+              f"{r['host_syncs']} host syncs")
+    base = rows[0]["decode_tok_s"]
+    for r in rows:
+        r["speedup_vs_superstep1"] = r["decode_tok_s"] / base
+    best = max(rows, key=lambda r: r["decode_tok_s"])
+    print(f"[decode-bench] best superstep={best['superstep']}: "
+          f"{best['speedup_vs_superstep1']:.2f}x over superstep=1")
+
+    fused = {}
+    fused_base = None
+    for fuse in (False, True):
+        r = time_fused(cfg, params, fuse, slots=args.slots,
+                       max_len=args.max_len, chunk=args.chunk,
+                       iters=args.iters)
+        results = r.pop("results")
+        if fused_base is None:
+            fused_base = results
+        elif results != fused_base:
+            raise AssertionError("fuse=True changed greedy tokens")
+        fused["fused" if fuse else "unfused"] = r
+        print(f"[decode-bench] {'fused' if fuse else 'unfused':>8}: "
+              f"{r['tok_s']:10.1f} tok/s, "
+              f"{r['total_dispatches']} total dispatches "
+              f"({r['fused_steps']} fused / {r['overlapped_steps']} "
+              f"overlapped steps)")
+    fused["dispatch_ratio"] = (fused["fused"]["total_dispatches"]
+                               / fused["unfused"]["total_dispatches"])
+    print(f"[decode-bench] fused dispatches "
+          f"x{fused['dispatch_ratio']:.2f}")
+
+    if args.out:
+        art = {"arch": cfg.name, "slots": args.slots,
+               "prompt_len": args.prompt_len, "max_new": args.max_new,
+               "superstep_sweep": rows, "fused": fused}
+        with open(args.out, "w") as f:
+            json.dump(art, f, indent=2)
+        print(f"[decode-bench] wrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -185,18 +185,27 @@ def _is_weight_load(c: Command) -> bool:
 
 
 def merge_streams(streams: Sequence[Sequence[Command]],
-                  mode: str = "parallel") -> List[Command]:
+                  mode: str = "parallel",
+                  issue_mode: str = "shared") -> List[Command]:
     """Compose several per-dispatch command streams into ONE command DAG
     with cross-stream dependencies, so the simulator can score them as a
     single scheduling problem instead of back-to-back runs.
 
     mode="parallel" — co-scheduled phase streams of one overlapped serving
-      step (interleaved prefill chunk + resident-batch decode): a shared
-      ``step_issue`` root models the host issuing both dispatches in one
-      step; beyond that the streams only interact through the machine
-      resources (per-core MU/VU, the PIM array, the shared unified-memory
-      device) inside the simulator — which is exactly the constraint set
-      the overlap must respect.
+      step (interleaved prefill chunk + resident-batch decode): an issue
+      root models the host issuing the step's dispatches; beyond that the
+      streams only interact through the machine resources (per-core MU/VU,
+      the PIM array, the shared unified-memory device) inside the
+      simulator — which is exactly the constraint set the overlap must
+      respect. ``issue_mode`` picks the root structure:
+        "shared"  — ONE ``step_issue`` root for every stream: the step is a
+                    single fused dispatch (``ServeConfig.fuse``; schema-v4
+                    ``fused`` events), one program carrying both phases.
+        "chained" — one ``step_issue<i>`` root per stream, chained in
+                    program order: the host launches the dispatches
+                    back-to-back (the unfused overlapped step — device work
+                    may still overlap, but each launch waits for the
+                    previous issue slot).
 
     mode="pipelined" — consecutive serving steps with cross-step weight
       prefetch (ROADMAP "trace-driven sim scenarios"): stream k+1's compute
@@ -205,26 +214,38 @@ def merge_streams(streams: Sequence[Sequence[Command]],
       operands are static — are freed to start as soon as step k has
       started, modeling next-step weight prefetch during the current step's
       tail. Dynamic-operand loads (embeddings, KV prefetch) stay chained:
-      their contents depend on the previous step's output.
+      their contents depend on the previous step's output. (Also how a
+      decode SUPERSTEP's inner steps compose: one device program genuinely
+      pipelines the next inner step's weight streams.)
 
     Commands are rebased and renamed ``s<i>.<name>``; Algorithm 1 must run
     per stream *before* merging (its dep-indexed weight-void rewrite and
     prefetch-credit scan assume a single stream in program order)."""
     if mode not in ("parallel", "pipelined"):
         raise ValueError(f"unknown merge mode {mode!r}")
+    if issue_mode not in ("shared", "chained"):
+        raise ValueError(f"unknown issue mode {issue_mode!r}")
     streams = [list(s) for s in streams]
     if len(streams) == 1:
         return list(streams[0])
     out: List[Command] = []
     issue: Optional[int] = None
-    if mode == "parallel":
-        # the host issuing both dispatches in one step: one issue slot on a
-        # DMA queue, no memory-device occupancy (kind dma_onchip, 0 bytes)
+    if mode == "parallel" and issue_mode == "shared":
+        # one fused dispatch: one issue slot on a DMA queue, no
+        # memory-device occupancy (kind dma_onchip, 0 bytes)
         out.append(Command("step_issue", DMA, "dma_onchip", tag="issue"))
         issue = 0
     prev_sources: Tuple[int, ...] = ()
     prev_sinks: Tuple[int, ...] = ()
     for si, stream in enumerate(streams):
+        if mode == "parallel" and issue_mode == "chained":
+            # separate host dispatches: each stream's issue slot is chained
+            # behind the previous stream's (launch order is serial even
+            # when the launched device work overlaps)
+            deps_i = (issue,) if issue is not None else ()
+            out.append(Command(f"step_issue{si}", DMA, "dma_onchip",
+                               tag="issue", deps=deps_i))
+            issue = len(out) - 1
         off = len(out)
         has_child = [False] * len(stream)
         for c in stream:

@@ -41,6 +41,12 @@ def main(argv=None):
     ap.add_argument("--decode-floor", type=int, default=0,
                     help="defer decode below this ready-slot occupancy "
                          "when a prefill chunk fills the step")
+    ap.add_argument("--fuse", action="store_true",
+                    help="lower an overlapped step (prefill chunk + "
+                         "resident-batch decode) into ONE jitted dispatch")
+    ap.add_argument("--superstep", type=int, default=1,
+                    help="run up to K decode steps per dispatch when no "
+                         "prefill work is pending (1 = off)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -54,7 +60,9 @@ def main(argv=None):
                                   prefill_chunk=args.prefill_chunk,
                                   policy=args.policy, pack=args.pack,
                                   max_prefill_jobs=args.prefill_jobs,
-                                  decode_floor=args.decode_floor))
+                                  decode_floor=args.decode_floor,
+                                  fuse=args.fuse,
+                                  superstep=args.superstep))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = args.prompt_len or int(rng.integers(2, 10))
@@ -76,7 +84,13 @@ def main(argv=None):
     print(f"[serve] dispatches: {eng.dispatch_counts['prefill']} prefill "
           f"({eng.effective_prefill_mode}"
           f"{', packed' if args.pack else ''}), "
-          f"{eng.dispatch_counts['decode']} decode")
+          f"{eng.dispatch_counts['decode']} decode, "
+          f"{eng.dispatch_counts['fused']} fused; "
+          f"{eng.host_syncs} host syncs")
+    if args.superstep > 1:
+        print(f"[serve] supersteps (K={args.superstep}): "
+              f"{eng.scheduler.stats['superstep']} dispatches covering "
+              f"{eng.superstep_tokens} decode rounds")
     st = eng.prefill_stats
     if st["token_slots"]:
         print(f"[serve] prefill valid-token fraction: "
@@ -85,8 +99,9 @@ def main(argv=None):
                  if eng.decode_deferrals else ""))
     stats = eng.scheduler.stats
     print(f"[serve] policy {eng.effective_policy}: "
-          f"{stats['overlapped']} overlapped / {stats['serialized']} "
-          f"serialized / {stats['decode_only']} decode-only steps")
+          f"{stats['fused']} fused / {stats['overlapped']} overlapped / "
+          f"{stats['serialized']} serialized / {stats['decode_only']} "
+          f"decode-only steps")
     return results
 
 

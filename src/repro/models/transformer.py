@@ -12,6 +12,13 @@ Entry points:
   forward_full                — train/prefill logits
   loss_fn                     — LM loss (+ MoE aux)
   decode_step                 — one-token generation step against the cache
+  decode_and_sample           — decode + sample + terminate (one dispatch)
+  decode_superstep            — k decode_and_sample steps under one lax.scan
+                                (one dispatch, one host fetch per superstep)
+  fused_step[_packed]         — a prefill chunk AND the resident batch's
+                                decode_and_sample lowered into ONE program
+                                (the overlapped serving step as a single
+                                dispatch, not two back-to-back ones)
   encode / prefill_with_cache — serving-side helpers
 """
 from __future__ import annotations
@@ -369,6 +376,122 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.lm_logits(params["embed"], x, cfg.tie_embeddings)
     return logits[:, 0, :], new_cache
+
+
+# --------------------------------------------------------------------------- #
+# fused generation step: decode + sample + length/termination update — the
+# body of the serving engine's single-dispatch decode, factored here so the
+# superstep scan and the fused overlapped step can reuse it verbatim
+# --------------------------------------------------------------------------- #
+def decode_and_sample(cfg: ModelConfig, params: dict, cache: dict,
+                      last_tok: jax.Array, lens: jax.Array,
+                      active: jax.Array, gen_count: jax.Array,
+                      max_new: jax.Array, rng: jax.Array, *,
+                      temperature: float, eos_token: Optional[int],
+                      max_len: int):
+    """One generation step across all slots in ONE program: decode, sample,
+    and update per-slot length / termination state. Everything the host
+    needs back (sampled token, done flag, new length per slot) is stacked
+    into a single (3, B) int32 ``fetch`` array so a dispatch costs exactly
+    one device->host transfer. Inactive slots are frozen: their token stays
+    ``last_tok`` and their lens/gen_count do not advance — which is also
+    what lets the superstep scan keep finished lanes fixed."""
+    logits, cache = decode_step(cfg, params, last_tok[:, None], cache, lens)
+    rng, sub = jax.random.split(rng)
+    if temperature > 0:
+        toks = jax.random.categorical(sub, logits / temperature, axis=-1)
+    else:
+        toks = jnp.argmax(logits, axis=-1)
+    toks = jnp.where(active, toks.astype(jnp.int32), last_tok)
+    act32 = active.astype(jnp.int32)
+    lens = lens + act32
+    gen_count = gen_count + act32
+    if eos_token is not None:
+        eos = toks == eos_token
+    else:
+        eos = jnp.zeros_like(active)
+    done = active & (eos | (gen_count >= max_new)
+                     | (lens >= max_len - 1))
+    fetch = jnp.stack([toks, done.astype(jnp.int32), lens])
+    return fetch, cache, toks, lens, gen_count, rng
+
+
+def decode_superstep(cfg: ModelConfig, params: dict, cache: dict,
+                     last_tok: jax.Array, lens: jax.Array,
+                     active: jax.Array, gen_count: jax.Array,
+                     max_new: jax.Array, rng: jax.Array, *, k: int,
+                     temperature: float, eos_token: Optional[int],
+                     max_len: int):
+    """k generation steps in ONE dispatch (``lax.scan`` over
+    ``decode_and_sample``). The termination mask is carried through the
+    scan: a lane that finishes at inner step t is dropped from ``active``
+    and frozen for the remaining k-t-1 steps, so per-request tokens are
+    identical to k single-step dispatches — the host just resolves one
+    (k, 3, B) fetch per superstep instead of one (3, B) fetch per token.
+    The rng split sequence matches k single-step dispatches exactly — a
+    round with NO live lane keeps the carried rng unsplit, because the
+    per-step engine would not have dispatched it at all — so even
+    temperature sampling is superstep-invariant (the dead rounds' other
+    side effects, K/V writes at frozen cursors, land in rows that
+    admission resets before reuse)."""
+    def body(carry, _):
+        cache, last_tok, lens, active, gen_count, rng = carry
+        fetch, cache, last_tok, lens, gen_count, new_rng = decode_and_sample(
+            cfg, params, cache, last_tok, lens, active, gen_count,
+            max_new, rng, temperature=temperature, eos_token=eos_token,
+            max_len=max_len)
+        rng = jnp.where(active.any(), new_rng, rng)
+        active = active & (fetch[1] == 0)
+        return (cache, last_tok, lens, active, gen_count, rng), fetch
+
+    carry0 = (cache, last_tok, lens, active, gen_count, rng)
+    (cache, last_tok, lens, _active, gen_count, rng), fetches = \
+        jax.lax.scan(body, carry0, None, length=k)
+    return fetches, cache, last_tok, lens, gen_count, rng
+
+
+def fused_step(cfg: ModelConfig, params: dict, cache: dict,
+               tokens: jax.Array, tok_valid: jax.Array,
+               last_tok: jax.Array, lens: jax.Array, active: jax.Array,
+               gen_count: jax.Array, max_new: jax.Array, rng: jax.Array, *,
+               offset: int, temperature: float, eos_token: Optional[int],
+               max_len: int):
+    """One FUSED overlapped serving step: the resident batch's decode AND a
+    prefill chunk in ONE program — the single-dispatch realization of the
+    co-scheduled step the schedulers compose (the simulator scored the
+    overlap; this makes it exist on hardware instead of two back-to-back
+    dispatches). Order matches the unfused step: the decode reads the
+    pre-step cache (its side-effect K/V write for mid-prefill slots lands
+    at the parked max_len-1 cursor), then the chunk scatters its K/V — the
+    two touch disjoint slots, so numerics are identical by construction."""
+    fetch, cache, last_tok, lens, gen_count, rng = decode_and_sample(
+        cfg, params, cache, last_tok, lens, active, gen_count, max_new,
+        rng, temperature=temperature, eos_token=eos_token, max_len=max_len)
+    cache = prefill_chunk(cfg, params, tokens, cache, tok_valid,
+                          offset=offset)
+    return fetch, cache, last_tok, lens, gen_count, rng
+
+
+def fused_step_packed(cfg: ModelConfig, params: dict, cache: dict,
+                      tokens: jax.Array, seg_slot: jax.Array,
+                      seg_pos: jax.Array, seg_ids: jax.Array,
+                      tok_valid: jax.Array, row_slot: jax.Array,
+                      prefix_len: jax.Array, last_tok: jax.Array,
+                      lens: jax.Array, active: jax.Array,
+                      gen_count: jax.Array, max_new: jax.Array,
+                      rng: jax.Array, *, prefix_span: int,
+                      temperature: float, eos_token: Optional[int],
+                      max_len: int):
+    """``fused_step`` with a PACKED prefill chunk (several prompts / a
+    continuation tail per lane) riding the decode — one program, one
+    dispatch, one fetch."""
+    fetch, cache, last_tok, lens, gen_count, rng = decode_and_sample(
+        cfg, params, cache, last_tok, lens, active, gen_count, max_new,
+        rng, temperature=temperature, eos_token=eos_token, max_len=max_len)
+    cache = prefill_chunk_packed(cfg, params, tokens, cache, seg_slot,
+                                 seg_pos, seg_ids, tok_valid, row_slot,
+                                 prefix_len, prefix_span=prefix_span)
+    return fetch, cache, last_tok, lens, gen_count, rng
 
 
 # --------------------------------------------------------------------------- #

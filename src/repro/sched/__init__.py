@@ -32,6 +32,7 @@ from repro.sched.policies import (
     InterleavedScheduler,
     PimAwareScheduler,
     SerialScheduler,
+    choose_superstep,
     make_scheduler,
 )
 
@@ -39,5 +40,5 @@ __all__ = [
     "PrefillJob", "Scheduler",
     "PackedDispatch", "PackedPrefillJob", "plan_packed_job",
     "POLICY_NAMES", "InterleavedScheduler", "PimAwareScheduler",
-    "SerialScheduler", "make_scheduler",
+    "SerialScheduler", "choose_superstep", "make_scheduler",
 ]

@@ -72,6 +72,9 @@ class Scheduler:
         self.stats: Dict[str, int] = {
             "steps": 0,          # scheduler steps taken
             "overlapped": 0,     # prefill chunk co-scheduled with decode
+                                 # (two dispatches, scored concurrent)
+            "fused": 0,          # overlapped step lowered as ONE dispatch
+            "superstep": 0,      # multi-step decode dispatch (k steps/fetch)
             "serialized": 0,     # both phases present, run back-to-back
             "prefill_only": 0,   # prefill chunk, no resident decode batch
             "decode_only": 0,    # decode only

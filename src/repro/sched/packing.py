@@ -135,7 +135,8 @@ class PackedPrefillJob:
 
 
 def plan_packed_job(wave: List[Tuple[int, object]], *, max_slots: int,
-                    chunk: int, sub_batch: int) -> Optional[PackedPrefillJob]:
+                    chunk: int, sub_batch: int,
+                    segregate: bool = True) -> Optional[PackedPrefillJob]:
     """First-fit-decreasing pack of a wave's prefill tokens into chunk rows.
 
     Returns None when the wave has no cache tokens to write (all
@@ -146,6 +147,19 @@ def plan_packed_job(wave: List[Tuple[int, object]], *, max_slots: int,
     non-decreasing dispatches in piece order; each dispatch carries at most
     ``max_slots`` lanes; no (slot, position) cache cell is written by more
     than one token of one dispatch.
+
+    ``segregate`` (default on) stable-sorts the lanes so rows WITHOUT a
+    continuation prefix come first: a dispatch's ``prefix_span`` is the max
+    prefix over its rows, and every row attends (masked) over the whole
+    [prefix ; chunk] span, so mixing one continuation tail with short
+    prompts makes the shorts pay prefix_span KV reads of pure masked-out
+    attention. Segregated, short-prompt-only dispatches run at span 0 and
+    only continuation dispatches pay the gather. The sort is stable and
+    orders no-prefix rows ahead of prefix rows, so a prompt's pieces keep
+    their non-decreasing dispatch order (piece 0 has no prefix and can only
+    move earlier; pieces 1..n all have prefixes and keep relative order) —
+    and the dispatch count (ceil(lanes / max_slots)) is unchanged. When
+    every lane still fits one dispatch nothing changes at all.
     """
     B, C = max_slots, chunk
     items = []                          # (total_len, slot, req, [pieces])
@@ -191,6 +205,11 @@ def plan_packed_job(wave: List[Tuple[int, object]], *, max_slots: int,
                 break
         else:
             rows.append(_Row(segments=[seg]))
+
+    # per-lane prefix spans: segregate continuation lanes behind plain ones
+    # so span-free dispatches stop paying the prefix gather (see docstring)
+    if segregate:
+        rows.sort(key=lambda row: any(s.start > 0 for s in row.segments))
 
     # materialize: lanes split into dispatches of at most B rows, each grid
     # exactly the rows it carries

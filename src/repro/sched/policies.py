@@ -11,6 +11,12 @@ interleaved  — NeuPIMs-style sub-batch interleaving: an admission wave
                decode step's PIM FC mat-vecs; the trace records the pair as
                an overlapped step and the replay merges their command
                streams into one DAG (``core.pas.merge_streams``).
+Both interleaving policies lower a co-scheduled step into ONE jitted
+dispatch when ``ServeConfig.fuse`` is set (``engine.dispatch_fused_step``),
+and every policy runs pure-decode steps as multi-step SUPERSTEPS when
+``ServeConfig.superstep`` > 1 — ``choose_superstep`` picks the length from
+queue state so admission latency stays bounded at one step.
+
 pim_aware    — interleaved, gated by the mapping: co-schedule only when the
                two phases' FC mappings land on *different* engines
                (``route_fc_tpu`` over the FFN FC — the Algorithm-1 decision
@@ -30,9 +36,34 @@ from repro.core.pas import route_fc_tpu
 from repro.sched.base import PrefillJob, Scheduler
 
 
+def choose_superstep(engine) -> int:
+    """Superstep length from queue state (``ServeConfig.superstep`` is the
+    cap). A superstep commits the engine to k decode rounds with no
+    admission in between, so it only fires when nothing is waiting: any
+    queued request forces k=1 to keep admission latency at one step. The
+    length is additionally clipped to the largest remaining generation
+    budget among ready slots — inner steps past every lane's budget would
+    run frozen lanes for nothing."""
+    k = engine.scfg.superstep
+    if k <= 1 or engine.queue:
+        return 1
+    # per-lane rounds left = min(generation budget, cache headroom before
+    # the max_len-1 cap) — both host-computable; without the cap term a
+    # near-full lane leaves dead tail rounds of full-batch decode compute
+    cap = engine.scfg.max_len - 1
+    rem = [min(r.max_new_tokens - len(r.generated),
+               cap - (len(r.prompt) - 1 + len(r.generated)))
+           for i, r in enumerate(engine.slot_req)
+           if r is not None and engine.slot_ready[i]]
+    if not rem:
+        return 1
+    return max(1, min(k, max(rem)))
+
+
 class SerialScheduler(Scheduler):
     """Extracted pre-sched ``ServeEngine.step`` behaviour: admission wave
-    prefills to completion before the step's decode dispatch."""
+    prefills to completion before the step's decode dispatch. Pure-decode
+    steps (no admission) may run as a superstep."""
 
     name = "serial"
 
@@ -40,6 +71,13 @@ class SerialScheduler(Scheduler):
         wave = engine.admit_wave()
         if wave:
             engine.prefill_wave(wave)
+        else:
+            k = choose_superstep(engine)
+            if k > 1:
+                pending = engine.dispatch_decode_superstep(k)
+                if pending is not None:
+                    self._tick("superstep")
+                    return engine.resolve_decode_superstep(pending)
         pending = engine.dispatch_decode()
         if pending is None:
             self._tick("prefill_only" if wave else "idle")
@@ -110,8 +148,10 @@ class InterleavedScheduler(Scheduler):
             return None
         return self.jobs[self._rr % len(self.jobs)]
 
-    def _advance_job(self, engine, job, overlap: bool) -> None:
-        engine.dispatch_prefill_chunk(job, overlap=overlap)
+    def _retire_chunk(self, engine, job) -> None:
+        """Post-dispatch job bookkeeping shared by the separate-dispatch and
+        fused paths: arm completed slots, drop drained jobs, advance the
+        round-robin cursor."""
         ready = job.take_completed()
         if ready:                       # packed jobs arm slots per dispatch
             engine.finish_prefill(ready)
@@ -123,6 +163,10 @@ class InterleavedScheduler(Scheduler):
             self._rr %= len(self.jobs)
         else:
             self._rr = 0
+
+    def _advance_job(self, engine, job, overlap: bool) -> None:
+        engine.dispatch_prefill_chunk(job, overlap=overlap)
+        self._retire_chunk(engine, job)
 
     def step(self, engine) -> List[Tuple[int, int]]:
         self._start_jobs(engine)
@@ -140,7 +184,23 @@ class InterleavedScheduler(Scheduler):
             self._tick("prefill_only")
             return []
         self._deferred_last = False
+        if not have_prefill:
+            # pure-decode step: amortize dispatch overhead over a superstep
+            k = choose_superstep(engine)
+            if k > 1:
+                pending = engine.dispatch_decode_superstep(k)
+                if pending is not None:
+                    self._tick("superstep")
+                    return engine.resolve_decode_superstep(pending)
         co = have_prefill and n_ready > 0 and self.allow_overlap(engine, job)
+        if co and engine.scfg.fuse and job.next_valid_count() > 0:
+            # single-dispatch overlapped step: the chunk and the decode are
+            # one jitted program — the overlap exists on hardware, not just
+            # in the replay's merged command DAG
+            pending = engine.dispatch_fused_step(job)
+            self._retire_chunk(engine, job)
+            self._tick("fused")
+            return engine.resolve_decode(pending)
         pending = engine.dispatch_decode(overlap=co)
         if co:
             # the chunk dispatch rides inside the decode fetch window

@@ -47,10 +47,22 @@ packing numerically invisible. Slots arm for generation as soon as their
 own prompt's last segment is cached (``PrefillJob.take_completed``), so
 short prompts in a packed wave start decoding before the wave drains.
 
+Fused serving steps (``ServeConfig.fuse`` / ``ServeConfig.superstep``): an
+overlapped step can be lowered into ONE jitted program carrying both the
+prefill chunk and the resident batch's decode (``dispatch_fused_step``), so
+the co-issue the simulator scores is what the hardware actually runs; and
+when no prefill work is pending, up to ``superstep`` decode steps run
+inside one dispatch (``dispatch_decode_superstep``: ``lax.scan`` with
+on-device sampling/termination, finished lanes frozen) resolving one host
+fetch per superstep instead of per token. Greedy tokens are identical
+across all of fused/unfused and superstep in {1, k} — only the dispatch
+schedule changes.
+
 A ``repro.trace.TraceRecorder`` can be attached at construction to capture
 every request / admission / prefill-dispatch / decode-step / completion
-event — including each step's sub-batch membership and overlap flags — for
-offline lowering to PAS command streams (see repro/trace/).
+event — including each step's sub-batch membership, overlap/fused flags and
+superstep spans — for offline lowering to PAS command streams (see
+repro/trace/).
 """
 from __future__ import annotations
 
@@ -108,31 +120,43 @@ def _jit_prefill_packed(cfg: ModelConfig, prefix_span: int):
 @functools.lru_cache(maxsize=None)
 def _jit_decode_sample(cfg: ModelConfig, temperature: float,
                        eos_token: Optional[int], max_len: int):
-    """Fused generation step: decode + sample + length/termination update in
-    ONE dispatch. Everything the host needs back (sampled token, done flag,
-    new length per slot) is stacked into a single (3, B) int32 array so the
-    step costs exactly one device->host transfer."""
-    def f(params, cache, last_tok, lens, active, gen_count, max_new, rng):
-        logits, cache = T.decode_step(cfg, params, last_tok[:, None],
-                                      cache, lens)
-        rng, sub = jax.random.split(rng)
-        if temperature > 0:
-            toks = jax.random.categorical(sub, logits / temperature, axis=-1)
-        else:
-            toks = jnp.argmax(logits, axis=-1)
-        toks = jnp.where(active, toks.astype(jnp.int32), last_tok)
-        act32 = active.astype(jnp.int32)
-        lens = lens + act32
-        gen_count = gen_count + act32
-        if eos_token is not None:
-            eos = toks == eos_token
-        else:
-            eos = jnp.zeros_like(active)
-        done = active & (eos | (gen_count >= max_new)
-                         | (lens >= max_len - 1))
-        fetch = jnp.stack([toks, done.astype(jnp.int32), lens])
-        return fetch, cache, toks, lens, gen_count, rng
-    return jax.jit(f)
+    """Fused generation step (``T.decode_and_sample``): decode + sample +
+    length/termination update in ONE dispatch, one (3, B) fetch."""
+    return jax.jit(functools.partial(
+        T.decode_and_sample, cfg, temperature=temperature,
+        eos_token=eos_token, max_len=max_len))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_decode_superstep(cfg: ModelConfig, temperature: float,
+                          eos_token: Optional[int], max_len: int, k: int):
+    """k generation steps under one jit (``T.decode_superstep``): one
+    dispatch and ONE (k, 3, B) host fetch per superstep — the dispatch-
+    amortization lever for launch-overhead-bound decode."""
+    return jax.jit(functools.partial(
+        T.decode_superstep, cfg, k=k, temperature=temperature,
+        eos_token=eos_token, max_len=max_len))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_fused_step(cfg: ModelConfig, temperature: float,
+                    eos_token: Optional[int], max_len: int, offset: int):
+    """One jitted FUSED overlapped step per static chunk offset: the
+    resident batch's decode + the chunk's prefill in one program."""
+    return jax.jit(functools.partial(
+        T.fused_step, cfg, offset=offset, temperature=temperature,
+        eos_token=eos_token, max_len=max_len))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_fused_step_packed(cfg: ModelConfig, temperature: float,
+                           eos_token: Optional[int], max_len: int,
+                           prefix_span: int):
+    """Fused overlapped step, packed-prefill variant (static prefix span,
+    same specialization scheme as ``_jit_prefill_packed``)."""
+    return jax.jit(functools.partial(
+        T.fused_step_packed, cfg, prefix_span=prefix_span,
+        temperature=temperature, eos_token=eos_token, max_len=max_len))
 
 
 @dataclass(frozen=True)
@@ -170,17 +194,44 @@ class ServeConfig:
     # slots are decode-ready, batching it with the next step's decode
     # (0 = disabled; engine.decode_deferrals counts deferrals).
     decode_floor: int = 0
+    # fused overlapped step: lower a co-scheduled prefill chunk AND the
+    # resident batch's decode into ONE jitted dispatch (T.fused_step), so
+    # the NPU/PIM overlap the replay scores actually exists on hardware
+    # instead of two back-to-back dispatches (interleaving policies,
+    # batched prefill path only; tokens identical either way).
+    fuse: bool = False
+    # decode supersteps: when no prefill work is pending, run up to this
+    # many decode steps inside one dispatch (lax.scan with on-device
+    # sampling/termination; finished lanes freeze) and resolve ONE host
+    # fetch per superstep. Schedulers cap the step length via
+    # choose_superstep so admission latency stays bounded (1 = disabled).
+    superstep: int = 1
 
 
 @dataclass
 class PendingDecode:
     """A dispatched-but-unresolved decode step: the device fetch array plus
-    the host-side view needed to attribute its results at resolve time."""
+    the host-side view needed to attribute its results at resolve time.
+    ``fused`` marks a single-dispatch overlapped step (the decode rode the
+    same program as a prefill chunk)."""
     fetch: jax.Array
     active_np: np.ndarray
     n_tok: int
     route: dict
     overlap: bool = False
+    fused: bool = False
+
+
+@dataclass
+class PendingSuperstep:
+    """A dispatched-but-unresolved decode SUPERSTEP: one (k, 3, B) fetch
+    covering k generation steps. ``sid`` is the superstep dispatch ordinal
+    (trace consumers group the k per-step events it expands into)."""
+    fetch: jax.Array
+    active_np: np.ndarray
+    k: int
+    route: dict
+    sid: int
 
 
 class ServeEngine:
@@ -211,15 +262,24 @@ class ServeEngine:
                                         max_jobs=scfg.max_prefill_jobs,
                                         decode_floor=scfg.decode_floor)
         self.pas_log: List[dict] = []
-        # dispatch accounting (benchmarks/serve_prefill.py reads this)
-        self.dispatch_counts = {"prefill": 0, "decode": 0}
+        # dispatch accounting (benchmarks/serve_prefill.py + serve_decode.py
+        # read this): "fused" counts single-dispatch overlapped steps (one
+        # program carrying a prefill chunk AND a decode — neither bucket
+        # alone); a decode superstep counts ONE "decode" dispatch.
+        self.dispatch_counts = {"prefill": 0, "decode": 0, "fused": 0}
         self.host_syncs = 0           # blocking device->host transfers
         self.async_fetches = 0        # fetches whose copy started at dispatch
         self.decode_deferrals = 0     # decode dispatches pushed one step by
                                       # the occupancy guard (decode_floor)
+        self.superstep_tokens = 0     # decode rounds resolved via supersteps
+        self._superstep_seq = 0       # superstep dispatch ordinal (trace)
         # padding-waste accounting for the batched prefill path:
-        # token_slots = B*C rows computed per dispatch; valid = useful ones
-        self.prefill_stats = {"token_slots": 0, "valid_tokens": 0}
+        # token_slots = B*C rows computed per dispatch; valid = useful ones;
+        # kv_cells = attended KV cells per computed row summed over prefill
+        # dispatches (rows * attended span) — what the per-lane prefix-span
+        # segregation in the packing planner reduces
+        self.prefill_stats = {"token_slots": 0, "valid_tokens": 0,
+                              "kv_cells": 0}
         self.step_idx = 0             # engine step counter (trace timeline)
         self.wave_count = 0           # admission waves (trace sub-batch ids)
         self.recorder = recorder
@@ -360,6 +420,47 @@ class ServeEngine:
         by every later admission batch (and engine instance)."""
         return _jit_prefill(self.cfg, chunk_idx * self.scfg.prefill_chunk)
 
+    def _account_chunk_prefill(self, job: PrefillJob, c: int,
+                               vc: np.ndarray, *, overlap: bool,
+                               fused: bool) -> None:
+        """Stats + PAS log + trace event for one UNPACKED chunk dispatch
+        (shared by the standalone and fused paths)."""
+        B, C = self.scfg.max_slots, job.chunk
+        self.prefill_stats["token_slots"] += B * C
+        self.prefill_stats["valid_tokens"] += int(vc.sum())
+        self.prefill_stats["kv_cells"] += B * (c * C + C)
+        entry = phase_log_entry(
+            "summarization", int(vc.sum()), len(job.wave),
+            self.cfg.d_model, self.cfg.d_ff)
+        self.pas_log.append(entry)
+        if self.recorder is not None:
+            self.recorder.on_prefill(
+                self.step_idx, offset=c * C, chunk=C,
+                valid=int(vc.sum()), kv=c * C + C,
+                slots=[int(s) for s, _ in job.wave if vc[s].any()],
+                route=entry, sub_batch=job.sub_batch, overlap=overlap,
+                fused=fused)
+
+    def _account_packed_prefill(self, job: PackedPrefillJob, d, *,
+                                overlap: bool, fused: bool) -> None:
+        """Stats + PAS log + trace event for one PACKED dispatch (shared by
+        the standalone and fused paths)."""
+        C = job.chunk
+        self.prefill_stats["token_slots"] += d.token_slots
+        self.prefill_stats["valid_tokens"] += d.n_valid
+        self.prefill_stats["kv_cells"] += d.rows * (d.prefix_span + C)
+        slots = sorted({int(s) for s in d.seg_slot[d.valid]})
+        entry = phase_log_entry(
+            "summarization", d.n_valid, len(slots),
+            self.cfg.d_model, self.cfg.d_ff)
+        self.pas_log.append(entry)
+        if self.recorder is not None:
+            self.recorder.on_prefill(
+                self.step_idx, offset=-1, chunk=C, valid=d.n_valid,
+                kv=d.prefix_span + C, slots=slots, route=entry,
+                sub_batch=job.sub_batch, overlap=overlap, fused=fused,
+                packed=True, segments=d.segments, rows=d.rows)
+
     def dispatch_prefill_chunk(self, job: PrefillJob, *,
                                overlap: bool = False) -> None:
         """Run the job's next chunk through the batched flash prefill path.
@@ -372,24 +473,13 @@ class ServeEngine:
         vc = job.valid[:, c * C:(c + 1) * C]
         if not vc.any():
             return
-        B = self.scfg.max_slots
         fn = self._get_prefill_fn(c)
         self.cache = fn(self.params,
                         jnp.asarray(job.tokens[:, c * C:(c + 1) * C]),
                         self.cache, jnp.asarray(vc))
         self.dispatch_counts["prefill"] += 1
-        self.prefill_stats["token_slots"] += B * C
-        self.prefill_stats["valid_tokens"] += int(vc.sum())
-        entry = phase_log_entry(
-            "summarization", int(vc.sum()), len(job.wave),
-            self.cfg.d_model, self.cfg.d_ff)
-        self.pas_log.append(entry)
-        if self.recorder is not None:
-            self.recorder.on_prefill(
-                self.step_idx, offset=c * C, chunk=C,
-                valid=int(vc.sum()), kv=c * C + C,
-                slots=[int(s) for s, _ in job.wave if vc[s].any()],
-                route=entry, sub_batch=job.sub_batch, overlap=overlap)
+        self._account_chunk_prefill(job, c, vc, overlap=overlap,
+                                    fused=False)
 
     def _dispatch_packed_chunk(self, job: PackedPrefillJob, *,
                                overlap: bool = False) -> None:
@@ -402,26 +492,13 @@ class ServeEngine:
         prompts) so the trace records offset=-1 and the true packing."""
         d = job.dispatches[job.next_chunk]
         job.next_chunk += 1
-        C = job.chunk
         fn = _jit_prefill_packed(self.cfg, d.prefix_span)
         self.cache = fn(self.params, jnp.asarray(d.tokens), self.cache,
                         jnp.asarray(d.seg_slot), jnp.asarray(d.seg_pos),
                         jnp.asarray(d.seg_ids), jnp.asarray(d.valid),
                         jnp.asarray(d.row_slot), jnp.asarray(d.prefix_len))
         self.dispatch_counts["prefill"] += 1
-        self.prefill_stats["token_slots"] += d.token_slots
-        self.prefill_stats["valid_tokens"] += d.n_valid
-        slots = sorted({int(s) for s in d.seg_slot[d.valid]})
-        entry = phase_log_entry(
-            "summarization", d.n_valid, len(slots),
-            self.cfg.d_model, self.cfg.d_ff)
-        self.pas_log.append(entry)
-        if self.recorder is not None:
-            self.recorder.on_prefill(
-                self.step_idx, offset=-1, chunk=C, valid=d.n_valid,
-                kv=d.prefix_span + C, slots=slots, route=entry,
-                sub_batch=job.sub_batch, overlap=overlap,
-                packed=True, segments=d.segments, rows=d.rows)
+        self._account_packed_prefill(job, d, overlap=overlap, fused=False)
 
     def finish_prefill(self, wave) -> None:
         """A wave's prompt is fully cached: arm the slots for generation
@@ -459,7 +536,7 @@ class ServeEngine:
         """Reference path (and fallback for SSM/hybrid/encdec stacks):
         teacher-forced decode steps, one dispatch + host sync per token."""
         for slot, req in wave:
-            for tok in req.prompt[:-1]:
+            for pos, tok in enumerate(req.prompt[:-1]):
                 t = jnp.zeros((self.scfg.max_slots, 1), jnp.int32
                               ).at[slot, 0].set(int(tok))
                 _logits, self.cache = self._decode(self.params, t, self.cache,
@@ -471,6 +548,8 @@ class ServeEngine:
                 # reports are silently wrong for SSM/hybrid fallback waves
                 self.prefill_stats["token_slots"] += self.scfg.max_slots
                 self.prefill_stats["valid_tokens"] += 1
+                self.prefill_stats["kv_cells"] += \
+                    self.scfg.max_slots * (pos + 1)
             n_valid = max(len(req.prompt) - 1, 0)
             entry = phase_log_entry(
                 "summarization", n_valid, len(wave),
@@ -483,31 +562,139 @@ class ServeEngine:
                     sub_batch=self.wave_count - 1, overlap=False)
 
     # ---- generation phase: one fused decode dispatch across ready slots ---- #
+    def _ready_active(self) -> Tuple[Optional[np.ndarray], int]:
+        """(active mask, count) over decode-ready slots; (None, 0) when no
+        slot is ready — the shared prologue of every decode dispatch."""
+        ready = self.ready_slot_ids()
+        if not ready:
+            return None, 0
+        active_np = np.zeros((self.scfg.max_slots,), bool)
+        active_np[ready] = True
+        return active_np, len(ready)
+
+    def _log_generation(self, n_tok: int) -> dict:
+        entry = phase_log_entry(
+            "generation", n_tok, n_tok, self.cfg.d_model, self.cfg.d_ff)
+        self.pas_log.append(entry)
+        return entry
+
+    def _start_fetch(self, fetch) -> None:
+        """Double-buffered fetch: start the result's device->host copy at
+        dispatch so co-scheduled work overlaps the transfer."""
+        if self.scfg.double_buffer and hasattr(fetch, "copy_to_host_async"):
+            fetch.copy_to_host_async()
+            self.async_fetches += 1
+
     def dispatch_decode(self, *, overlap: bool = False
                         ) -> Optional[PendingDecode]:
         """Issue the fused decode+sample+terminate dispatch for every ready
         slot and start the result's async device->host copy (double-buffered
         fetch): the blocking sync happens in ``resolve_decode``, after the
         scheduler has issued whatever it co-schedules in between."""
-        active_np = np.zeros((self.scfg.max_slots,), bool)
-        ready = self.ready_slot_ids()
-        if not ready:
+        active_np, n_tok = self._ready_active()
+        if active_np is None:
             return None
-        active_np[ready] = True
-        n_tok = len(ready)
-        entry = phase_log_entry(
-            "generation", n_tok, n_tok, self.cfg.d_model, self.cfg.d_ff)
-        self.pas_log.append(entry)
+        entry = self._log_generation(n_tok)
         (fetch, self.cache, self.last_tok, self.lens, self.gen_count,
          self._rng) = self._decode_sample(
             self.params, self.cache, self.last_tok, self.lens,
             jnp.asarray(active_np), self.gen_count, self.max_new, self._rng)
         self.dispatch_counts["decode"] += 1
-        if self.scfg.double_buffer and hasattr(fetch, "copy_to_host_async"):
-            fetch.copy_to_host_async()
-            self.async_fetches += 1
+        self._start_fetch(fetch)
         return PendingDecode(fetch=fetch, active_np=active_np, n_tok=n_tok,
                              route=entry, overlap=overlap)
+
+    def dispatch_fused_step(self, job) -> PendingDecode:
+        """Issue ONE dispatch carrying the resident batch's decode AND the
+        job's next prefill chunk (``T.fused_step[_packed]``) — the
+        single-program realization of an overlapped step. The caller
+        guarantees a non-empty decode batch and a chunk with valid tokens;
+        counted as one ``fused`` dispatch (neither a prefill nor a decode
+        one), traced as a fused prefill + decode event pair."""
+        active_np, n_tok = self._ready_active()
+        assert active_np is not None, \
+            "fused step needs a resident decode batch"
+        dentry = self._log_generation(n_tok)
+        C = self.scfg.prefill_chunk
+        common = (self.last_tok, self.lens, jnp.asarray(active_np),
+                  self.gen_count, self.max_new, self._rng)
+        if isinstance(job, PackedPrefillJob):
+            d = job.dispatches[job.next_chunk]
+            job.next_chunk += 1
+            fn = _jit_fused_step_packed(
+                self.cfg, self.scfg.temperature, self.scfg.eos_token,
+                self.scfg.max_len, d.prefix_span)
+            (fetch, self.cache, self.last_tok, self.lens, self.gen_count,
+             self._rng) = fn(
+                self.params, self.cache, jnp.asarray(d.tokens),
+                jnp.asarray(d.seg_slot), jnp.asarray(d.seg_pos),
+                jnp.asarray(d.seg_ids), jnp.asarray(d.valid),
+                jnp.asarray(d.row_slot), jnp.asarray(d.prefix_len), *common)
+            self._account_packed_prefill(job, d, overlap=True, fused=True)
+        else:
+            c = job.next_chunk
+            job.next_chunk += 1
+            vc = job.valid[:, c * C:(c + 1) * C]
+            assert vc.any(), "fused step dispatched an empty prefill chunk"
+            fn = _jit_fused_step(
+                self.cfg, self.scfg.temperature, self.scfg.eos_token,
+                self.scfg.max_len, c * C)
+            (fetch, self.cache, self.last_tok, self.lens, self.gen_count,
+             self._rng) = fn(
+                self.params, self.cache,
+                jnp.asarray(job.tokens[:, c * C:(c + 1) * C]),
+                jnp.asarray(vc), *common)
+            self._account_chunk_prefill(job, c, vc, overlap=True,
+                                        fused=True)
+        self.dispatch_counts["fused"] += 1
+        self._start_fetch(fetch)
+        return PendingDecode(fetch=fetch, active_np=active_np, n_tok=n_tok,
+                             route=dentry, overlap=True, fused=True)
+
+    def dispatch_decode_superstep(self, k: int
+                                  ) -> Optional[PendingSuperstep]:
+        """Issue ONE dispatch running up to k decode steps (``lax.scan``
+        with on-device sampling and termination; finished lanes freeze).
+        Resolves one (k, 3, B) fetch instead of k (3, B) fetches — counted
+        as a single decode dispatch. The routing entry is decided ONCE at
+        dispatch (the scanned program cannot re-route mid-flight), so all k
+        inner trace events share it by design even when lanes terminate
+        mid-span — the divergence report then measures exactly that
+        per-dispatch commitment against Algorithm 1's per-round mapping."""
+        active_np, n_tok = self._ready_active()
+        if active_np is None:
+            return None
+        entry = self._log_generation(n_tok)
+        fn = _jit_decode_superstep(self.cfg, self.scfg.temperature,
+                                   self.scfg.eos_token, self.scfg.max_len, k)
+        (fetch, self.cache, self.last_tok, self.lens, self.gen_count,
+         self._rng) = fn(
+            self.params, self.cache, self.last_tok, self.lens,
+            jnp.asarray(active_np), self.gen_count, self.max_new, self._rng)
+        self.dispatch_counts["decode"] += 1
+        self._start_fetch(fetch)
+        sid = self._superstep_seq
+        self._superstep_seq += 1
+        return PendingSuperstep(fetch=fetch, active_np=active_np, k=k,
+                                route=entry, sid=sid)
+
+    def _finish_slot(self, i: int) -> None:
+        """Retire a slot whose request just terminated: free it, record the
+        completion (shared by single-step and superstep resolve)."""
+        r = self.slot_req[i]
+        r.done = True
+        self.slot_req[i] = None
+        self.slot_ready[i] = False
+        if self.recorder is not None:
+            if self.scfg.eos_token is not None \
+                    and r.generated[-1] == self.scfg.eos_token:
+                reason = "eos"
+            elif len(r.generated) >= r.max_new_tokens:
+                reason = "max_new"
+            else:
+                reason = "cache_full"
+            self.recorder.on_complete(self.step_idx, r.rid, reason,
+                                      len(r.generated))
 
     def resolve_decode(self, pending: PendingDecode
                        ) -> List[Tuple[int, int]]:
@@ -529,24 +716,52 @@ class ServeEngine:
                 slot_lens=[int(x) for x in lens_np],
                 slots=[int(i) for i in active_idx],
                 tokens=list(out), route=pending.route,
-                overlap=pending.overlap)
+                overlap=pending.overlap, fused=pending.fused)
         for i in active_idx:
-            if not done_np[i]:
-                continue
-            r = self.slot_req[i]
-            r.done = True
-            self.slot_req[i] = None
-            self.slot_ready[i] = False
+            if done_np[i]:
+                self._finish_slot(i)
+        return out
+
+    def resolve_decode_superstep(self, pending: PendingSuperstep
+                                 ) -> List[Tuple[int, int]]:
+        """Materialize a superstep's (k, 3, B) fetch — ONE blocking host
+        sync for k generation steps — and expand it into the per-step
+        results: tokens append in inner-step order, each inner step records
+        its own decode event (schema v4 ``superstep`` span), completions
+        fire at the inner step where the lane terminated, and the engine
+        clock advances one step per inner step so open-loop arrival timing
+        stays one-decode-round-per-tick."""
+        fetch_np = np.asarray(pending.fetch)      # (k, 3, B)
+        self.host_syncs += 1
+        out: List[Tuple[int, int]] = []
+        active = pending.active_np.copy()
+        for i in range(pending.k):
+            if i:
+                self.step_idx += 1     # inner steps advance the timeline
+            idx = np.nonzero(active)[0]
+            if idx.size == 0:
+                continue               # lanes drained early; clock still ran
+            toks_np = fetch_np[i, 0]
+            done_np = fetch_np[i, 1].astype(bool)
+            lens_np = fetch_np[i, 2]
+            step_out = [(self.slot_req[s].rid, int(toks_np[s]))
+                        for s in idx]
+            for s, (_rid, tok) in zip(idx, step_out):
+                self.slot_req[s].generated.append(tok)
+            self.superstep_tokens += 1
             if self.recorder is not None:
-                if self.scfg.eos_token is not None \
-                        and r.generated[-1] == self.scfg.eos_token:
-                    reason = "eos"
-                elif len(r.generated) >= r.max_new_tokens:
-                    reason = "max_new"
-                else:
-                    reason = "cache_full"
-                self.recorder.on_complete(self.step_idx, r.rid, reason,
-                                          len(r.generated))
+                self.recorder.on_decode(
+                    self.step_idx, occupancy=int(idx.size),
+                    slot_lens=[int(x) for x in lens_np],
+                    slots=[int(s) for s in idx],
+                    tokens=list(step_out), route=pending.route,
+                    overlap=False, superstep=pending.k,
+                    superstep_id=pending.sid)
+            for s in idx:
+                if done_np[s]:
+                    self._finish_slot(s)
+            active &= ~done_np
+            out.extend(step_out)
         return out
 
     # ---- step: composition delegated to the scheduling policy --------------- #

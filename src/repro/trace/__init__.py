@@ -18,13 +18,16 @@
 """
 from repro.trace.arrivals import (
     ArrivalEvent,
+    LengthDistribution,
     bursty_arrivals,
     drive,
+    lengths_from_file,
     poisson_arrivals,
 )
 from repro.trace.lower import (
     LoweredStep,
     divergence_report,
+    group_dispatch_spans,
     group_overlapped,
     trace_to_commands,
 )
@@ -41,9 +44,10 @@ from repro.trace.schema import (
 )
 
 __all__ = [
-    "ArrivalEvent", "bursty_arrivals", "drive", "poisson_arrivals",
-    "LoweredStep", "divergence_report", "group_overlapped",
-    "trace_to_commands",
+    "ArrivalEvent", "LengthDistribution", "bursty_arrivals", "drive",
+    "lengths_from_file", "poisson_arrivals",
+    "LoweredStep", "divergence_report", "group_dispatch_spans",
+    "group_overlapped", "trace_to_commands",
     "TraceRecorder",
     "ReplayResult", "TraceReplayer", "baseline_comparison",
     "SCHEMA_VERSION", "SUPPORTED_VERSIONS", "Trace", "TraceSchemaError",

@@ -8,12 +8,20 @@ the engine's step counter as the clock (one decode step = one time unit):
   poisson_arrivals — open-loop Poisson(rate) arrivals per step
   bursty_arrivals  — on/off-modulated Poisson (same mean load, bursty)
 
+Lengths default to uniform over a range; passing ``lengths=`` (a
+``LengthDistribution``, e.g. ``lengths_from_file(path)`` over a JSON
+histogram sampled from a real chat corpus — one ships under
+``benchmarks/data/chat_lengths.json``) draws prompt/output lengths from the
+empirical distribution instead, clipped into the generator's bounds so
+workloads stay servable under a given ``max_len``.
+
 ``drive`` feeds an arrival list into a ``ServeEngine`` step by step, so a
 ``TraceRecorder`` attached to the engine captures the arrival process,
 queueing, admission waves and early terminations exactly as served.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -27,35 +35,117 @@ class ArrivalEvent:
     max_new: int
 
 
+@dataclass
+class LengthDistribution:
+    """Empirical prompt/output length histograms. Each side is a binned
+    histogram: ``edges`` has n+1 ascending integers, ``counts`` n weights;
+    a sample picks a bin by weight, then an integer uniformly in
+    [edges[i], edges[i+1] - 1]."""
+    prompt_edges: np.ndarray
+    prompt_counts: np.ndarray
+    output_edges: np.ndarray
+    output_counts: np.ndarray
+    source: str = ""
+
+    @staticmethod
+    def _check(edges: np.ndarray, counts: np.ndarray, name: str) -> None:
+        if len(edges) != len(counts) + 1:
+            raise ValueError(f"{name}: need len(edges) == len(counts) + 1, "
+                             f"got {len(edges)} / {len(counts)}")
+        if not (np.diff(edges) > 0).all():
+            raise ValueError(f"{name}: edges must be strictly ascending")
+        if counts.sum() <= 0 or (counts < 0).any():
+            raise ValueError(f"{name}: counts must be non-negative with a "
+                             f"positive total")
+
+    def __post_init__(self):
+        for side in ("prompt", "output"):
+            edges = np.asarray(getattr(self, f"{side}_edges"), np.int64)
+            counts = np.asarray(getattr(self, f"{side}_counts"), np.float64)
+            self._check(edges, counts, side)
+            setattr(self, f"{side}_edges", edges)
+            setattr(self, f"{side}_counts", counts)
+
+    def _sample(self, rng: np.random.Generator, edges, counts) -> int:
+        i = rng.choice(len(counts), p=counts / counts.sum())
+        return int(rng.integers(edges[i], edges[i + 1]))
+
+    def sample_prompt(self, rng: np.random.Generator) -> int:
+        return self._sample(rng, self.prompt_edges, self.prompt_counts)
+
+    def sample_output(self, rng: np.random.Generator) -> int:
+        return self._sample(rng, self.output_edges, self.output_counts)
+
+
+def lengths_from_file(path) -> LengthDistribution:
+    """Load a JSON length histogram:
+
+        {"source": "...",
+         "prompt": {"edges": [...n+1 ints...], "counts": [...n...]},
+         "output": {"edges": [...], "counts": [...]}}
+
+    so arrival generators draw realistic prompt/output lengths instead of
+    synthesizing uniform ones."""
+    with open(path) as f:
+        d = json.load(f)
+    try:
+        return LengthDistribution(
+            prompt_edges=np.asarray(d["prompt"]["edges"]),
+            prompt_counts=np.asarray(d["prompt"]["counts"]),
+            output_edges=np.asarray(d["output"]["edges"]),
+            output_counts=np.asarray(d["output"]["counts"]),
+            source=d.get("source", ""))
+    except KeyError as e:
+        raise ValueError(f"length histogram {path} missing key {e}") from e
+
+
 def _make_requests(rng: np.random.Generator, steps: np.ndarray,
                    prompt_len: Tuple[int, int], max_new: Tuple[int, int],
-                   vocab: int) -> List[ArrivalEvent]:
+                   vocab: int,
+                   lengths: Optional[LengthDistribution] = None
+                   ) -> List[ArrivalEvent]:
     out = []
+    # draw order is plen, prompt, max_new — the historical rng stream, so
+    # seeded workloads recorded before the `lengths` option stay
+    # byte-identical
     for s in steps:
-        plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
-        out.append(ArrivalEvent(
-            step=int(s),
-            prompt=rng.integers(0, vocab, plen).astype(np.int32),
-            max_new=int(rng.integers(max_new[0], max_new[1] + 1))))
+        if lengths is not None:
+            # empirical draw, clipped into the generator's bounds so the
+            # workload stays servable under the engine's max_len
+            plen = int(np.clip(lengths.sample_prompt(rng),
+                               prompt_len[0], prompt_len[1]))
+        else:
+            plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        prompt = rng.integers(0, vocab, plen).astype(np.int32)
+        if lengths is not None:
+            mnew = int(np.clip(lengths.sample_output(rng),
+                               max_new[0], max_new[1]))
+        else:
+            mnew = int(rng.integers(max_new[0], max_new[1] + 1))
+        out.append(ArrivalEvent(step=int(s), prompt=prompt, max_new=mnew))
     return out
 
 
 def poisson_arrivals(rate: float, horizon: int, *, vocab: int,
                      prompt_len: Tuple[int, int] = (2, 32),
                      max_new: Tuple[int, int] = (4, 16),
+                     lengths: Optional[LengthDistribution] = None,
                      seed: int = 0) -> List[ArrivalEvent]:
     """Open-loop load: per-step arrival counts ~ Poisson(rate), prompt
-    lengths and generation budgets uniform over the given ranges."""
+    lengths and generation budgets uniform over the given ranges — or
+    drawn from ``lengths`` (an empirical distribution) clipped into
+    them."""
     rng = np.random.default_rng(seed)
     counts = rng.poisson(rate, horizon)
     steps = np.repeat(np.arange(horizon), counts)
-    return _make_requests(rng, steps, prompt_len, max_new, vocab)
+    return _make_requests(rng, steps, prompt_len, max_new, vocab, lengths)
 
 
 def bursty_arrivals(rate: float, horizon: int, *, vocab: int,
                     burst: int = 8, idle: int = 24,
                     prompt_len: Tuple[int, int] = (2, 32),
                     max_new: Tuple[int, int] = (4, 16),
+                    lengths: Optional[LengthDistribution] = None,
                     seed: int = 0) -> List[ArrivalEvent]:
     """On/off-modulated Poisson: arrivals only during `burst`-step windows
     separated by `idle` quiet steps, with the on-rate scaled so the mean
@@ -67,7 +157,7 @@ def bursty_arrivals(rate: float, horizon: int, *, vocab: int,
     rate_on = rate * period / burst
     counts = np.where(on, rng.poisson(rate_on, horizon), 0)
     steps = np.repeat(np.arange(horizon), counts)
-    return _make_requests(rng, steps, prompt_len, max_new, vocab)
+    return _make_requests(rng, steps, prompt_len, max_new, vocab, lengths)
 
 
 def drive(engine, arrivals: List[ArrivalEvent],

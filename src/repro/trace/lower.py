@@ -37,6 +37,9 @@ class LoweredStep:
     overlap: bool = False      # co-scheduled with the same step's other phase
     sub_batch: int = -1        # prefill sub-batch (admission wave) ordinal
     packed: bool = False       # packed prefill dispatch (schema v3)
+    fused: bool = False        # overlapped step ran as ONE dispatch (v4)
+    superstep: int = 1         # k of the multi-step decode dispatch (v4)
+    superstep_id: int = -1     # superstep dispatch ordinal (-1 = plain)
 
     def to_dict(self) -> dict:
         return {
@@ -46,7 +49,8 @@ class LoweredStep:
             "decisions": [decision_to_dict(d) for d in self.decisions],
             "live_route": dict(self.live_route),
             "overlap": self.overlap, "sub_batch": self.sub_batch,
-            "packed": self.packed,
+            "packed": self.packed, "fused": self.fused,
+            "superstep": self.superstep, "superstep_id": self.superstep_id,
         }
 
 
@@ -86,7 +90,11 @@ def trace_to_commands(trace: Trace, cfg: Optional[ModelConfig] = None,
                                live_route=dict(ev["route"]),
                                overlap=bool(ev.get("overlap", False)),
                                sub_batch=int(ev.get("sub_batch", -1)),
-                               packed=bool(ev.get("packed", False))))
+                               packed=bool(ev.get("packed", False)),
+                               fused=bool(ev.get("fused", False)),
+                               superstep=int(ev.get("superstep", 1)),
+                               superstep_id=int(ev.get("superstep_id",
+                                                       -1))))
     return out
 
 
@@ -107,6 +115,29 @@ def group_overlapped(lowered: List[LoweredStep]) -> List[List[LoweredStep]]:
             groups[-1].append(ls)
         else:
             groups.append([ls])
+    return groups
+
+
+def group_dispatch_spans(lowered: List[LoweredStep]
+                         ) -> List[List[LoweredStep]]:
+    """Partition a lowered trace into the spans that shared a DISPATCH (or
+    a co-scheduled step): overlapped same-step events group exactly as
+    ``group_overlapped`` (fused or not), and the k per-step decode events a
+    SUPERSTEP dispatch expanded into (consecutive, same ``superstep_id``)
+    form one span — the replay chains them as the single pipelined device
+    program they actually were. Everything else stays a singleton."""
+    groups: List[List[LoweredStep]] = []
+    for ls in lowered:
+        if groups:
+            head = groups[-1][0]
+            if (ls.overlap and head.overlap and head.step == ls.step):
+                groups[-1].append(ls)
+                continue
+            if (ls.superstep_id >= 0 and ls.phase == "generation"
+                    and head.superstep_id == ls.superstep_id):
+                groups[-1].append(ls)
+                continue
+        groups.append([ls])
     return groups
 
 

@@ -47,6 +47,8 @@ class TraceRecorder:
                 "pack": scfg.pack,
                 "max_prefill_jobs": scfg.max_prefill_jobs,
                 "decode_floor": scfg.decode_floor,
+                "fuse": scfg.fuse,
+                "superstep": scfg.superstep,
             },
         }
 
@@ -65,7 +67,8 @@ class TraceRecorder:
                    kv: int, slots: List[int], route: dict,
                    sub_batch: int = 0, overlap: bool = False,
                    packed: bool = False, segments: Optional[int] = None,
-                   rows: Optional[int] = None) -> None:
+                   rows: Optional[int] = None,
+                   fused: bool = False) -> None:
         # unpacked layout: one row per dispatched slot, one segment per row
         if segments is None:
             segments = len(slots)
@@ -76,16 +79,19 @@ class TraceRecorder:
                             "kv": kv, "slots": slots, "route": dict(route),
                             "sub_batch": sub_batch, "overlap": overlap,
                             "packed": packed, "segments": segments,
-                            "rows": rows})
+                            "rows": rows, "fused": fused})
 
     def on_decode(self, step: int, *, occupancy: int, slot_lens: List[int],
                   slots: List[int], tokens: List[Tuple[int, int]],
-                  route: dict, overlap: bool = False) -> None:
+                  route: dict, overlap: bool = False, fused: bool = False,
+                  superstep: int = 1, superstep_id: int = -1) -> None:
         self.events.append({"type": "decode", "step": step,
                             "occupancy": occupancy, "slot_lens": slot_lens,
                             "slots": slots,
                             "tokens": [list(t) for t in tokens],
-                            "route": dict(route), "overlap": overlap})
+                            "route": dict(route), "overlap": overlap,
+                            "fused": fused, "superstep": superstep,
+                            "superstep_id": superstep_id})
 
     def on_complete(self, step: int, rid: int, reason: str,
                     n_generated: int) -> None:
@@ -101,7 +107,8 @@ class TraceRecorder:
                 "dispatch_counts": dict(e.dispatch_counts),
                 "host_syncs": e.host_syncs,
                 "prefill_stats": dict(e.prefill_stats),
-                "decode_deferrals": e.decode_deferrals}
+                "decode_deferrals": e.decode_deferrals,
+                "superstep_tokens": e.superstep_tokens}
 
     def to_trace(self) -> Trace:
         if self._header is None:

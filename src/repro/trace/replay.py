@@ -22,6 +22,15 @@ Two scheduler-era extensions:
     ROADMAP "trace-driven sim scenarios" item: ``pipeline`` reports the
     chained makespan and its gain over back-to-back composition, and the
     breakdown/utilization switch to the pipelined timeline.
+  * **Fused / superstep dispatches** (schema v4): an overlapped step whose
+    events carry ``fused`` ran as ONE device program — it scores with a
+    single shared issue root, while an unfused overlapped pair pays chained
+    per-dispatch issue slots (the host launched them back-to-back). The k
+    per-step decode events of one SUPERSTEP dispatch replay as one
+    pipelined DAG (``merge_streams(mode="pipelined")``): inside a single
+    program the next round's FC weight streams genuinely start during the
+    current round's tail. ``superstep_stats`` reports the span count and
+    the pipelining gain.
   * **Windowed pipelining** (``replay(..., cross_step=True, window=N)``):
     one whole-trace DAG is O((steps * commands)^2)-ish to schedule — fine
     at smoke dims, hostile at paper-scale dims over long traces. A window
@@ -39,7 +48,8 @@ from repro.configs.base import ModelConfig
 from repro.core.pas import merge_streams
 from repro.sim import baselines
 from repro.sim.engine import SimConfig, SimResult, Simulator, merge_results
-from repro.trace.lower import LoweredStep, divergence_report, group_overlapped
+from repro.trace.lower import (LoweredStep, divergence_report,
+                               group_dispatch_spans)
 
 
 @dataclass
@@ -51,8 +61,14 @@ class ReplayResult:
     exposed_tags: Dict[str, float]      # Fig. 10 attribution (exposed DMA)
     divergence: List[dict] = field(default_factory=list)
     # overlapped-step scoring: groups = co-scheduled steps merged into one
-    # DAG; gain = back-to-back time of their streams minus merged time
+    # DAG; gain = back-to-back time of their streams minus merged time;
+    # fused_groups = groups that ran as ONE dispatch (schema v4) and were
+    # scored with a single shared issue root instead of chained issues
     overlap_stats: Dict[str, float] = field(default_factory=dict)
+    # superstep scoring (schema v4): spans = multi-step decode dispatches,
+    # steps = decode rounds they covered, gain = back-to-back time of the
+    # inner steps minus the pipelined single-program time
+    superstep_stats: Dict[str, float] = field(default_factory=dict)
     # cross-step pipelining (cross_step=True): chained-DAG makespan + gain
     pipeline: Optional[Dict[str, float]] = None
 
@@ -68,6 +84,7 @@ class ReplayResult:
             "exposed_tags": dict(self.exposed_tags),
             "divergence": [dict(r) for r in self.divergence],
             "overlap_stats": dict(self.overlap_stats),
+            "superstep_stats": dict(self.superstep_stats),
             "pipeline": dict(self.pipeline) if self.pipeline else None,
         }
 
@@ -96,9 +113,12 @@ class TraceReplayer:
         results: List[SimResult] = []
         streams: List[List] = []        # command stream charged per group
         overlapped_groups = 0
+        fused_groups = 0
         serialized_time = 0.0           # back-to-back time of merged streams
         merged_time = 0.0
-        for group in group_overlapped(lowered):
+        ss_spans, ss_steps = 0, 0
+        ss_serial_time, ss_chained_time = 0.0, 0.0
+        for group in group_dispatch_spans(lowered):
             if len(group) == 1:
                 ls = group[0]
                 r = self.sim.run(ls.commands)
@@ -106,25 +126,57 @@ class TraceReplayer:
                 phase_steps[ls.phase] += 1
                 results.append(r)
                 streams.append(ls.commands)
-            else:
-                cmds = merge_streams([ls.commands for ls in group],
-                                     mode="parallel")
+            elif group[0].overlap:
+                # one overlapped serving step: fused pairs (schema v4) ran
+                # as ONE dispatch and score a single shared issue root; the
+                # unfused pair was two back-to-back host launches, so its
+                # per-stream issue slots chain
+                fused = all(ls.fused for ls in group)
+                cmds = merge_streams(
+                    [ls.commands for ls in group], mode="parallel",
+                    issue_mode="shared" if fused else "chained")
                 r = self.sim.run(cmds)
                 solo = sum(self.sim.run(ls.commands).makespan
                            for ls in group)
                 overlapped_groups += 1
+                fused_groups += fused
                 serialized_time += solo
                 merged_time += r.makespan
                 phase_time["overlapped"] += r.makespan
                 phase_steps["overlapped"] += 1
                 results.append(r)
                 streams.append(cmds)
+            else:
+                # a decode superstep's inner steps: one device program whose
+                # consecutive rounds genuinely pipeline (the next round's FC
+                # weight streams start during the current round's tail)
+                cmds = merge_streams([ls.commands for ls in group],
+                                     mode="pipelined")
+                r = self.sim.run(cmds)
+                solo = sum(self.sim.run(ls.commands).makespan
+                           for ls in group)
+                ss_spans += 1
+                ss_steps += len(group)
+                ss_serial_time += solo
+                ss_chained_time += r.makespan
+                phase_time["generation"] += r.makespan
+                phase_steps["generation"] += len(group)
+                results.append(r)
+                streams.append(cmds)
         merged = merge_results(results)
         overlap_stats = {
             "groups": overlapped_groups,
+            "fused_groups": fused_groups,
             "serialized_time": serialized_time,
             "overlapped_time": merged_time,
             "gain": serialized_time - merged_time,
+        }
+        superstep_stats = {
+            "spans": ss_spans,
+            "steps": ss_steps,
+            "serialized_time": ss_serial_time,
+            "chained_time": ss_chained_time,
+            "gain": ss_serial_time - ss_chained_time,
         }
         pipeline = None
         if cross_step and len(streams) > 1:
@@ -156,7 +208,9 @@ class TraceReplayer:
         return ReplayResult(result=merged, phase_time=phase_time,
                             phase_steps=phase_steps, exposed_tags=exposed,
                             divergence=divergence_report(lowered),
-                            overlap_stats=overlap_stats, pipeline=pipeline)
+                            overlap_stats=overlap_stats,
+                            superstep_stats=superstep_stats,
+                            pipeline=pipeline)
 
 
 def baseline_comparison(lowered: List[LoweredStep],

@@ -2,23 +2,26 @@
 
 A trace is one JSON object per line:
 
-  line 1:   {"type": "header", "version": 3, "arch": ..., "family": ...,
+  line 1:   {"type": "header", "version": 4, "arch": ..., "family": ...,
              "model": {num_layers, d_model, num_heads, num_kv_heads,
                        head_dim, d_ff, vocab_size},
              "serve": {max_slots, max_len, prefill_chunk, prefill_mode,
                        admission, temperature, eos_token, seed,
                        policy, sub_batch, pack, max_prefill_jobs,
-                       decode_floor}}
+                       decode_floor, fuse, superstep}}
   then, in engine-timeline order, any of:
     {"type": "request",  "step", "rid", "prompt_len", "max_new"}
     {"type": "admit",    "step", "wave": [[slot, rid, prompt_len], ...]}
     {"type": "prefill",  "step", "offset", "chunk", "valid", "kv",
                          "slots": [...], "route": {phase_log_entry},
                          "sub_batch": wave ordinal, "overlap": bool,
-                         "packed": bool, "segments": int, "rows": int}
+                         "packed": bool, "segments": int, "rows": int,
+                         "fused": bool}
     {"type": "decode",   "step", "occupancy", "slot_lens": [per-slot len],
                          "slots": [...], "tokens": [[rid, tok], ...],
-                         "route": {phase_log_entry}, "overlap": bool}
+                         "route": {phase_log_entry}, "overlap": bool,
+                         "fused": bool, "superstep": int,
+                         "superstep_id": int}
     {"type": "complete", "step", "rid", "reason", "n_generated"}
   last line: {"type": "summary", "dispatch_counts", "host_syncs",
               "prefill_stats"}
@@ -48,6 +51,16 @@ Version history:
        v1/v2 trace upgrades in place: packed=False, one segment per
        dispatched slot (segments=rows=len(slots)), pack=False,
        max_prefill_jobs=1, decode_floor=0.
+  v4 — fused serving steps: header.serve gains ``fuse`` and ``superstep``;
+       ``prefill`` and ``decode`` events carry ``fused`` (the overlapped
+       step ran as ONE dispatch — the fused pair shares a step and both
+       events flag it, so the replay scores them as one issue root);
+       ``decode`` events carry ``superstep`` (the k of the multi-step
+       dispatch that produced this step's tokens; 1 = a plain dispatch)
+       and ``superstep_id`` (the superstep dispatch ordinal — the k
+       per-step events one superstep expands into share it; -1 = plain).
+       Loading a v1/v2/v3 trace upgrades in place: fused=False,
+       superstep=1, superstep_id=-1, fuse=False, header superstep=1.
 """
 from __future__ import annotations
 
@@ -57,8 +70,8 @@ from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 
-SCHEMA_VERSION = 3
-SUPPORTED_VERSIONS = (1, 2, 3)
+SCHEMA_VERSION = 4
+SUPPORTED_VERSIONS = (1, 2, 3, 4)
 
 # required keys per event type (beyond "type")
 _REQUIRED: Dict[str, tuple] = {
@@ -77,6 +90,11 @@ _REQUIRED_V2: Dict[str, tuple] = {
 }
 _REQUIRED_V3: Dict[str, tuple] = {
     "prefill": ("packed", "segments", "rows"),
+}
+# additional keys required from v4 on
+_REQUIRED_V4: Dict[str, tuple] = {
+    "prefill": ("fused",),
+    "decode": ("fused", "superstep", "superstep_id"),
 }
 _MODEL_KEYS = ("num_layers", "d_model", "num_heads", "num_kv_heads",
                "head_dim", "d_ff", "vocab_size")
@@ -105,6 +123,8 @@ def validate_event(ev: dict, version: int = SCHEMA_VERSION) -> dict:
         required = required + _REQUIRED_V2.get(t, ())
     if version >= 3:
         required = required + _REQUIRED_V3.get(t, ())
+    if version >= 4:
+        required = required + _REQUIRED_V4.get(t, ())
     missing = [k for k in required if k not in ev]
     if missing:
         raise TraceSchemaError(f"{t} event missing keys {missing}: {ev!r}")
@@ -120,6 +140,8 @@ def validate_event(ev: dict, version: int = SCHEMA_VERSION) -> dict:
             raise TraceSchemaError("v2 header.serve missing 'policy'")
         if ev["version"] >= 3 and "pack" not in ev["serve"]:
             raise TraceSchemaError("v3 header.serve missing 'pack'")
+        if ev["version"] >= 4 and "fuse" not in ev["serve"]:
+            raise TraceSchemaError("v4 header.serve missing 'fuse'")
     if t in ("prefill", "decode"):
         missing = [k for k in _ROUTE_KEYS if k not in ev["route"]]
         if missing:
@@ -149,6 +171,18 @@ def upgrade_event(ev: dict, version: int) -> dict:
             ev["serve"].setdefault("pack", False)
             ev["serve"].setdefault("max_prefill_jobs", 1)
             ev["serve"].setdefault("decode_floor", 0)
+    if version < 4:
+        # pre-fusion semantics: every dispatch stands alone — overlapped
+        # steps were two host dispatches, every decode step its own fetch
+        if ev["type"] == "prefill":
+            ev.setdefault("fused", False)
+        elif ev["type"] == "decode":
+            ev.setdefault("fused", False)
+            ev.setdefault("superstep", 1)
+            ev.setdefault("superstep_id", -1)
+        elif ev["type"] == "header":
+            ev["serve"].setdefault("fuse", False)
+            ev["serve"].setdefault("superstep", 1)
     return ev
 
 
