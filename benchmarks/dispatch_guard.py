@@ -42,10 +42,10 @@ SERVE = dict(max_slots=4, max_len=64, prefill_chunk=8, policy="interleaved",
              pack=True, fuse=True, superstep=4, map_dims=(2048, 8192))
 
 
-def run_workload():
+def run_workload(recorder=None):
     cfg = get_arch("llama3.2-1b").reduced()
     params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, ServeConfig(**SERVE))
+    eng = ServeEngine(cfg, params, ServeConfig(**SERVE), recorder=recorder)
     arrivals = poisson_arrivals(WORKLOAD["rate"], WORKLOAD["horizon"],
                                 vocab=cfg.vocab_size,
                                 prompt_len=WORKLOAD["prompt_len"],

@@ -1,0 +1,129 @@
+"""Hazard-finding regression guard: the static analyzer as a CI gate.
+
+Serves the same deterministic smoke workload as ``dispatch_guard`` (same
+WORKLOAD/SERVE definitions — one source of truth), records the trace, and
+runs every ``repro.verify`` pass over it: the serving-protocol lint, the
+per-dispatch-span hazard analysis, the reference-DAG diff of each lowered
+step, and the host-sync AST lint over ``repro.{serve,sched}``. Finding
+counts per (severity, class) are compared against a recorded baseline:
+
+    PYTHONPATH=src python benchmarks/hazard_guard.py            # check
+    PYTHONPATH=src python benchmarks/hazard_guard.py --record   # rebase
+
+``--record`` also writes the recorded trace to ``data/smoke_trace.jsonl``
+so ``python -m repro.launch.verify --traces benchmarks/data`` has a
+committed artifact to chew on. The shipped baseline is all-zeros; any NEW
+finding class (or a count above baseline) fails the run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import Counter
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from dispatch_guard import SERVE, WORKLOAD, run_workload  # noqa: E402
+
+from repro.trace.lower import trace_to_commands  # noqa: E402
+from repro.trace.recorder import TraceRecorder  # noqa: E402
+from repro.trace.schema import model_config_from_header  # noqa: E402
+from repro.verify import (analyze_lowered, lint_host_syncs, lint_trace,  # noqa: E402
+                          load_allowlist, verify_lowered_step)
+
+DATA_DIR = os.path.join(os.path.dirname(__file__), "data")
+DEFAULT_BASELINE = os.path.join(DATA_DIR, "verify_baseline.json")
+SMOKE_TRACE = os.path.join(DATA_DIR, "smoke_trace.jsonl")
+SRC_ROOT = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+
+def collect_findings():
+    """Serve the guarded workload with a recorder and run all four verify
+    passes. Returns (findings, trace)."""
+    rec = TraceRecorder()
+    run_workload(recorder=rec)
+    trace = rec.to_trace()
+
+    findings = list(lint_trace(trace))
+    lowered = trace_to_commands(trace)
+    findings.extend(analyze_lowered(lowered))
+    cfg = model_config_from_header(trace.header)
+    for ls in lowered:
+        findings.extend(verify_lowered_step(ls, cfg))
+
+    allowlist = []
+    allow_path = os.path.join(SRC_ROOT, "verify", "sync_allowlist.txt")
+    if os.path.exists(allow_path):
+        allowlist = load_allowlist(allow_path)
+    findings.extend(lint_host_syncs(
+        [os.path.join(SRC_ROOT, "serve"), os.path.join(SRC_ROOT, "sched")],
+        allowlist, root=SRC_ROOT))
+    return findings, trace
+
+
+def finding_counts(findings):
+    c = Counter(f"{f.severity}:{f.klass}" for f in findings)
+    return dict(sorted(c.items()))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--record", action="store_true",
+                    help="write current counts as the new baseline and "
+                         "refresh the committed smoke trace")
+    args = ap.parse_args(argv)
+
+    findings, trace = collect_findings()
+    counts = finding_counts(findings)
+    cur = {
+        "workload": {"workload": {k: list(v) if isinstance(v, tuple) else v
+                                  for k, v in WORKLOAD.items()},
+                     "serve": {k: list(v) if isinstance(v, tuple) else v
+                               for k, v in SERVE.items()}},
+        "finding_counts": counts,
+        "total_findings": len(findings),
+    }
+    for f in findings:
+        print(f"[hazard-guard] {f.severity} {f.klass} "
+              f"[{f.location}] {f.message}")
+    print(f"[hazard-guard] {len(findings)} finding(s): {counts or '{}'}")
+
+    if args.record:
+        os.makedirs(DATA_DIR, exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(cur, f, indent=2)
+        trace.save(SMOKE_TRACE)
+        print(f"[hazard-guard] recorded baseline -> {args.baseline}")
+        print(f"[hazard-guard] recorded smoke trace -> {SMOKE_TRACE}")
+        return 0
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    if base["workload"] != cur["workload"]:
+        print("[hazard-guard] FAIL: workload definition changed — "
+              "re-record the baseline (--record)")
+        return 1
+    failures = []
+    for key, n in counts.items():
+        allowed = base["finding_counts"].get(key, 0)
+        if n > allowed:
+            failures.append(f"{key}: {n} > baseline {allowed}")
+    if failures:
+        print("[hazard-guard] FAIL: new findings vs baseline: "
+              + "; ".join(failures))
+        return 1
+    improved = {k: v for k, v in base["finding_counts"].items()
+                if counts.get(k, 0) < v}
+    if improved:
+        print(f"[hazard-guard] improved vs baseline: {improved} "
+              "(consider --record)")
+    print(f"[hazard-guard] OK: within baseline "
+          f"({base['total_findings']} finding(s) allowed)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,7 @@ from repro.core.pas import (
     adaptive_map,
     command_from_dict,
     command_to_dict,
+    commands_from_dicts,
     decide_qk_sv_unit,
     decision_from_dict,
     decision_to_dict,
@@ -29,7 +30,7 @@ from repro.core.pas import (
     merge_streams,
     phase_log_entry,
     route_fc_tpu,
-    MU, VU, PIM, DMA,
+    MU, VU, PIM, DMA, VALID_UNITS,
 )
 from repro.core.unified_memory import (
     AddressMap,
@@ -44,11 +45,11 @@ __all__ = [
     "FCConfig", "HardwareModel", "IANUS_HW", "NPU_MEM_HW", "TPU_V5E",
     "TPU_ICI_BW", "RooflineTerms", "roofline",
     "Command", "MappingDecision", "PASPolicy", "adaptive_map",
-    "command_from_dict", "command_to_dict",
+    "command_from_dict", "command_to_dict", "commands_from_dicts",
     "decide_qk_sv_unit", "decision_from_dict", "decision_to_dict",
     "decode_uses_gemv", "lower_commands", "merge_streams",
     "phase_log_entry", "route_fc_tpu",
-    "MU", "VU", "PIM", "DMA",
+    "MU", "VU", "PIM", "DMA", "VALID_UNITS",
     "AddressMap", "MemoryPlan", "WeightTiler",
     "partitioned_plan", "shared_fraction", "unified_plan",
 ]

@@ -36,6 +36,7 @@ from repro.core.cost_model import (
 
 # units
 MU, VU, PIM, DMA = "MU", "VU", "PIM", "DMA"
+VALID_UNITS = (MU, VU, PIM, DMA)
 
 
 @dataclass
@@ -58,7 +59,15 @@ class Command:
                                    # live in (PIM) memory; attention mapping
                                    # is the MHA schedule's decision (§5.3)
 
+    def __post_init__(self):
+        if self.unit not in VALID_UNITS:
+            raise ValueError(f"unknown execution unit {self.unit!r} "
+                             f"(have: {VALID_UNITS})")
+
     def retarget(self, unit: str) -> "Command":
+        if unit not in VALID_UNITS:
+            raise ValueError(f"cannot retarget {self.name!r} to unknown "
+                             f"unit {unit!r} (have: {VALID_UNITS})")
         return dataclasses.replace(self, unit=unit)
 
 
@@ -138,16 +147,32 @@ def command_to_dict(c: Command) -> dict:
     }
 
 
-def command_from_dict(d: dict) -> Command:
+def command_from_dict(d: dict, *, index: Optional[int] = None) -> Command:
+    """Rebuild a Command from its JSON form. Unknown units are rejected by
+    the constructor; with ``index`` (this command's position in its stream)
+    dependency references are range-checked, so a truncated or hand-edited
+    trace fails loudly instead of deserializing a dangling-dep DAG."""
     fc = FCConfig(*d["fc"]) if d.get("fc") is not None else None
+    deps = tuple(d.get("deps", ()))
+    if index is not None:
+        bad = [dep for dep in deps if not 0 <= int(dep) < index]
+        if bad:
+            raise ValueError(
+                f"command {d.get('name')!r} (index {index}) references "
+                f"absent command ids {bad} (deps must point backward)")
     return Command(
         name=d["name"], unit=d["unit"], kind=d["kind"],
         n_tokens=d.get("n_tokens", 1), fc=fc, dim=d.get("dim", 0),
         vu_passes=d.get("vu_passes", 1.0), bytes=d.get("bytes", 0),
-        deps=tuple(d.get("deps", ())), tag=d.get("tag", ""),
+        deps=deps, tag=d.get("tag", ""),
         core=d.get("core", 0), fused_act=d.get("fused_act", False),
         weights_resident=d.get("weights_resident", True),
     )
+
+
+def commands_from_dicts(ds: Sequence[dict]) -> List[Command]:
+    """Deserialize a whole command stream with dep-range validation."""
+    return [command_from_dict(d, index=i) for i, d in enumerate(ds)]
 
 
 def decision_to_dict(d: MappingDecision) -> dict:

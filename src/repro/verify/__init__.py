@@ -1,0 +1,37 @@
+"""repro.verify — static hazard analysis for PAS command DAGs and the
+serving protocol (the correctness gate CI runs over every shipped trace).
+
+Four passes, none of which execute anything:
+
+  footprints  per-Command read/write resource sets, derived from command
+              kind/unit/shape metadata and naming conventions — never from
+              the dep edges being checked
+  hazards     happens-before over any lowered/merged DAG; RAW/WAR/WAW and
+              the IANUS-specific PIM-compute-vs-normal-access class; plus
+              a reference-DAG diff that catches ANY dropped dependency
+              edge (lowering is deterministic in the step shape)
+  protocol    trace-level lint of the scheduler-era invariants: parked
+              write cursors, scatter-before-gather packing, single-fetch
+              supersteps, fused-pair issue roots, dispatch accounting
+  lint        AST scan of repro.{serve,sched} for host-sync calls outside
+              an explicit allowlist
+
+CLI: ``python -m repro.launch.verify --traces benchmarks/data
+--src src/repro`` (see README "Static verification").
+"""
+from repro.verify.footprints import (Footprint, Resource, bank_set,
+                                     command_footprints)
+from repro.verify.hazards import (Finding, SEVERITIES, analyze_commands,
+                                  analyze_lowered, diff_commands,
+                                  reference_commands, verify_lowered_step)
+from repro.verify.lint import (SYNC_ATTRS, SYNC_NAMES, lint_host_syncs,
+                               load_allowlist)
+from repro.verify.protocol import lint_trace
+
+__all__ = [
+    "Footprint", "Resource", "bank_set", "command_footprints",
+    "Finding", "SEVERITIES", "analyze_commands", "analyze_lowered",
+    "diff_commands", "reference_commands", "verify_lowered_step",
+    "SYNC_ATTRS", "SYNC_NAMES", "lint_host_syncs", "load_allowlist",
+    "lint_trace",
+]

@@ -1,0 +1,233 @@
+"""repro.verify DAG-level tests: footprints, hazard analysis, reference
+diff, structural checks, and the hardened PAS deserialization.
+
+Everything here is pure Python over Command lists — no jax, no serving.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_arch
+from repro.core.pas import (DMA, MU, PIM, VALID_UNITS, Command, PASPolicy,
+                            command_from_dict, command_to_dict,
+                            commands_from_dicts, merge_streams)
+from repro.verify import (Finding, analyze_commands, bank_set,
+                          command_footprints, diff_commands,
+                          reference_commands)
+from repro.verify.footprints import Resource
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_arch("llama3.2-1b").reduced()
+
+
+def drop_dep(cmds, cmd_name, dep_name):
+    """Copy of ``cmds`` with the edge cmd_name -> dep_name removed."""
+    idx = {c.name: i for i, c in enumerate(cmds)}
+    ci, di = idx[cmd_name], idx[dep_name]
+    out = list(cmds)
+    assert di in out[ci].deps, f"{cmd_name} has no dep on {dep_name}"
+    out[ci] = dataclasses.replace(
+        out[ci], deps=tuple(d for d in out[ci].deps if d != di))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# clean DAGs: every shipped lowering combo is hazard-free
+# --------------------------------------------------------------------------- #
+CLEAN_COMBOS = [
+    ("summarization", 16, 16, PASPolicy.paper()),
+    ("generation", 1, 24, PASPolicy.paper()),
+    ("generation", 1, 24, PASPolicy(qk_sv_unit=PIM)),       # Fig 7b
+    ("generation", 1, 24, PASPolicy.naive()),
+    ("generation", 1, 24, PASPolicy(adaptive_fc=False)),
+]
+
+
+@pytest.mark.parametrize("phase,n,kv,policy", CLEAN_COMBOS,
+                         ids=["summar", "gen", "gen-7b", "naive",
+                              "no-adaptive"])
+def test_clean_combos_hazard_free(cfg, phase, n, kv, policy):
+    cmds = reference_commands(cfg, phase, n, kv, policy)
+    assert analyze_commands(cmds) == []
+
+
+def test_merge_streams_hazard_free_shared_and_chained(cfg):
+    """Satellite: merged parallel streams stay hazard-free in both issue
+    modes — stream renaming keeps footprints disjoint and the issue root
+    orders every pair that shares a device."""
+    a = reference_commands(cfg, "generation", 1, 24)
+    b = reference_commands(cfg, "generation", 1, 32)
+    for issue_mode in ("shared", "chained"):
+        merged = merge_streams([a, b], mode="parallel",
+                               issue_mode=issue_mode)
+        assert analyze_commands(merged) == [], issue_mode
+
+
+def test_merge_streams_hazard_free_pipelined(cfg):
+    streams = [reference_commands(cfg, "generation", 1, 24 + 8 * i)
+               for i in range(3)]
+    merged = merge_streams(streams, mode="pipelined")
+    assert len(merged) == sum(len(s) for s in streams)
+    assert analyze_commands(merged) == []
+
+
+# --------------------------------------------------------------------------- #
+# seeded mutations: the analyzer is not vacuous, and classes are right
+# --------------------------------------------------------------------------- #
+def test_dropped_weight_load_edge_is_raw(cfg):
+    cmds = reference_commands(cfg, "summarization", 16, 16)
+    mutated = drop_dep(cmds, "ffn1.0", "ffn1.w0")
+    found = [(f.klass, f.names, f.resource)
+             for f in analyze_commands(mutated)]
+    # drop_dep hits the last layer's occurrence, hence ordinal #1
+    assert found == [("raw", ("ffn1.w0", "ffn1.0"), "wbuf::ffn1.w0#1")]
+
+
+def test_dropped_kv_store_edge_is_pim_normal_unordered(cfg):
+    """Fig 7b generation: QK^T on PIM reads the kv region the store is
+    still writing — the IANUS unified-memory class, not a plain RAW."""
+    cmds = reference_commands(cfg, "generation", 1, 24,
+                              PASPolicy(qk_sv_unit=PIM))
+    mutated = drop_dep(cmds, "qk.0", "kv_store")
+    found = analyze_commands(mutated)
+    assert found and all(f.klass == "pim_normal_unordered" for f in found)
+    assert all(f.resource.startswith("kv:") for f in found)
+    # qk.0 loses order directly, sv.0 transitively — both must be reported
+    names = {n for f in found for n in f.names}
+    assert "kv_store" in names and "qk.0" in names
+
+
+def test_dropped_prefetch_edge_is_raw_on_kvbuf(cfg):
+    cmds = reference_commands(cfg, "generation", 1, 24)
+    mutated = drop_dep(cmds, "qk.c0", "kv_prefetch")
+    found = analyze_commands(mutated)
+    assert [f.klass for f in found] == ["raw"]
+    assert found[0].resource == "kvbuf:#1"
+    assert set(found[0].names) == {"kv_prefetch", "qk.c0"}
+
+
+def test_hazard_findings_carry_witness_and_indices(cfg):
+    cmds = reference_commands(cfg, "summarization", 16, 16)
+    mutated = drop_dep(cmds, "ffn1.0", "ffn1.w0")
+    (f,) = analyze_commands(mutated)
+    assert f.severity == "error"
+    assert len(f.commands) == 2 and f.commands[0] < f.commands[1]
+    assert "<fork>" in f.witness
+    d = f.to_dict()
+    assert d["class"] == "raw" and isinstance(d["witness"], list)
+
+
+# --------------------------------------------------------------------------- #
+# reference diff: EVERY dropped edge is caught, footprint or not
+# --------------------------------------------------------------------------- #
+def test_diff_catches_every_dropped_edge(cfg):
+    ref = reference_commands(cfg, "generation", 1, 24)
+    n_edges = 0
+    for i, c in enumerate(ref):
+        for d in c.deps:
+            n_edges += 1
+            mutated = list(ref)
+            mutated[i] = dataclasses.replace(
+                mutated[i],
+                deps=tuple(x for x in mutated[i].deps if x != d))
+            findings = diff_commands(mutated, ref)
+            hits = [f for f in findings if f.klass == "missing_dep"
+                    and f.commands[0] == i and d in f.commands[1:]]
+            assert hits, f"dropped edge {i}->{d} ({c.name!r}) not reported"
+    assert n_edges > 100   # the sweep actually exercised a real DAG
+
+
+def test_diff_reports_extra_edges_as_warning(cfg):
+    ref = reference_commands(cfg, "generation", 1, 24)
+    mutated = list(ref)
+    tail = len(ref) - 1
+    mutated[tail] = dataclasses.replace(
+        mutated[tail], deps=mutated[tail].deps + (0,))
+    findings = diff_commands(mutated, ref)
+    assert [(f.severity, f.klass) for f in findings] \
+        == [("warning", "extra_dep")]
+
+
+def test_diff_reports_shape_mismatch(cfg):
+    ref = reference_commands(cfg, "generation", 1, 24)
+    assert any(f.klass == "graph_shape"
+               for f in diff_commands(ref[:-1], ref))
+
+
+# --------------------------------------------------------------------------- #
+# structural findings
+# --------------------------------------------------------------------------- #
+def test_dangling_dep_reported():
+    cmds = [Command("a", DMA, "dma_load", bytes=4, deps=()),
+            Command("b", MU, "fc", deps=(5,))]
+    found = analyze_commands(cmds)
+    assert [(f.severity, f.klass) for f in found] \
+        == [("error", "dangling_dep")]
+
+
+def test_forward_dep_reported():
+    cmds = [Command("a", DMA, "dma_load", bytes=4, deps=(1,)),
+            Command("b", MU, "fc", deps=())]
+    found = analyze_commands(cmds)
+    assert [f.klass for f in found] == ["forward_dep"]
+
+
+# --------------------------------------------------------------------------- #
+# footprints / banks
+# --------------------------------------------------------------------------- #
+def test_footprints_cover_weight_loads(cfg):
+    cmds = reference_commands(cfg, "summarization", 16, 16)
+    fps = command_footprints(cmds)
+    by_name = {c.name: fp for c, fp in zip(cmds, fps)}
+    w = by_name["ffn1.w0"]
+    assert any(r.space == "wbuf" for r in w.writes) and w.normal_access
+    fc = by_name["ffn1.0"]
+    assert any(r.space == "wbuf" for r in fc.reads)
+
+
+def test_bank_set_maps_kv_intervals():
+    banks = bank_set(Resource("kv", "#0", 0, 8192))
+    assert banks and all(isinstance(b, tuple) and len(b) == 2
+                         for b in banks)
+    assert bank_set(Resource("kvbuf", "#0")) == ()
+
+
+# --------------------------------------------------------------------------- #
+# hardened PAS deserialization (satellite)
+# --------------------------------------------------------------------------- #
+def test_command_rejects_unknown_unit():
+    with pytest.raises(ValueError, match="unknown execution unit"):
+        Command("x", "GPU", "fc")
+
+
+def test_retarget_rejects_unknown_unit():
+    c = Command("x", MU, "fc")
+    with pytest.raises(ValueError, match="unknown unit"):
+        c.retarget("NPU2")
+    assert c.retarget(PIM).unit == PIM
+
+
+def test_command_from_dict_rejects_bad_dep_index():
+    good = command_to_dict(Command("x", MU, "fc", deps=(0,)))
+    assert command_from_dict(good, index=1).deps == (0,)
+    with pytest.raises(ValueError, match="dep"):
+        command_from_dict(good, index=0)          # forward/self reference
+    bad = dict(good, deps=[-1])
+    with pytest.raises(ValueError, match="dep"):
+        command_from_dict(bad, index=1)
+
+
+def test_commands_from_dicts_validates_stream():
+    ds = [command_to_dict(Command("a", DMA, "dma_load", bytes=4)),
+          command_to_dict(Command("b", MU, "fc", deps=(0,)))]
+    cmds = commands_from_dicts(ds)
+    assert [c.name for c in cmds] == ["a", "b"]
+    ds[1]["deps"] = [3]
+    with pytest.raises(ValueError):
+        commands_from_dicts(ds)
+
+
+def test_valid_units_exported():
+    assert set(VALID_UNITS) >= {MU, PIM, DMA}

@@ -1,0 +1,262 @@
+"""repro.verify protocol tests: recorded traces from every shipped
+policy/knob combo lint clean; hand-corrupted traces produce exactly the
+findings the corruption plants; the host-sync lint and the CLI gate work.
+
+Serving runs are shared through module-scoped fixtures to keep this cheap.
+"""
+import copy
+import json
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serve import ServeConfig, ServeEngine
+from repro.trace import TraceRecorder, drive, poisson_arrivals
+from repro.trace.arrivals import ArrivalEvent
+from repro.trace.lower import trace_to_commands
+from repro.trace.schema import Trace, model_config_from_header
+from repro.verify import (analyze_lowered, lint_host_syncs, lint_trace,
+                          verify_lowered_step)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+COMBOS = {
+    "serial": dict(policy="serial"),
+    "interleaved": dict(policy="interleaved"),
+    "pim_aware": dict(policy="pim_aware"),
+    "serial-knobs": dict(policy="serial", pack=True, fuse=True, superstep=4),
+    "interleaved-knobs": dict(policy="interleaved", pack=True, fuse=True,
+                              superstep=4),
+    "pim_aware-knobs": dict(policy="pim_aware", pack=True, fuse=True,
+                            superstep=4),
+}
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_arch("llama3.2-1b").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
+
+
+def serve_trace(cfg, params, arrivals=None, **serve_kw):
+    serve_kw.setdefault("max_slots", 4)
+    serve_kw.setdefault("max_len", 64)
+    serve_kw.setdefault("prefill_chunk", 8)
+    serve_kw.setdefault("map_dims", (2048, 8192))
+    rec = TraceRecorder()
+    eng = ServeEngine(cfg, params, ServeConfig(**serve_kw), recorder=rec)
+    if arrivals is None:
+        arrivals = poisson_arrivals(0.5, 24, vocab=cfg.vocab_size,
+                                    prompt_len=(2, 20), max_new=(3, 8),
+                                    seed=11)
+    drive(eng, arrivals)
+    return rec.to_trace()
+
+
+@pytest.fixture(scope="module")
+def traces(cfg, params):
+    return {name: serve_trace(cfg, params, **kw)
+            for name, kw in COMBOS.items()}
+
+
+def mutate(trace):
+    """Deep-copied event/summary structure safe to corrupt in place."""
+    return Trace.loads(trace.dumps())
+
+
+def classes(findings):
+    return [(f.severity, f.klass) for f in findings]
+
+
+# --------------------------------------------------------------------------- #
+# every shipped combo is clean, end to end
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", list(COMBOS))
+def test_combo_trace_lints_clean(traces, name):
+    assert lint_trace(traces[name]) == []
+
+
+def test_combo_lowered_dags_hazard_free(traces, cfg):
+    """The superstep/fused/packed trace exercises every merge mode of
+    ``analyze_lowered`` plus the per-step reference diff."""
+    tr = traces["interleaved-knobs"]
+    lowered = trace_to_commands(tr)
+    assert analyze_lowered(lowered) == []
+    for ls in lowered[:6]:
+        assert verify_lowered_step(ls, cfg) == []
+
+
+def test_header_round_trips_model_config(traces, cfg):
+    hdr_cfg = model_config_from_header(traces["serial"].header)
+    assert hdr_cfg.num_layers == cfg.num_layers
+    assert hdr_cfg.d_model == cfg.d_model
+
+
+# --------------------------------------------------------------------------- #
+# planted corruptions: exactly one finding of exactly the right class
+# --------------------------------------------------------------------------- #
+def _decode_events(trace):
+    return [(i, e) for i, e in enumerate(trace.events)
+            if e["type"] == "decode"]
+
+
+def _mid_prefill_slot(trace, at):
+    """A slot admitted but not prefill-complete as of event index ``at``."""
+    need, covered = {}, {}
+    for e in trace.events[:at]:
+        if e["type"] == "admit":
+            for slot, _rid, plen in e["wave"]:
+                need[slot], covered[slot] = plen, 0
+        elif e["type"] == "prefill" and not e.get("packed"):
+            for slot in e["slots"]:
+                covered[slot] = covered.get(slot, 0) + e["chunk"]
+        elif e["type"] == "complete":
+            pass
+    for slot, n in need.items():
+        if covered.get(slot, 0) < n:
+            return slot
+    return None
+
+
+def test_decode_into_mid_prefill_slot_is_one_finding(traces):
+    tr = mutate(traces["interleaved"])
+    hit = None
+    for i, e in _decode_events(tr):
+        slot = _mid_prefill_slot(tr, i)
+        if slot is not None and slot not in e["slots"]:
+            hit = (i, e, slot)
+            break
+    assert hit, "workload never decoded beside an in-flight prefill"
+    i, e, slot = hit
+    e["slots"] = sorted(e["slots"] + [slot])
+    found = lint_trace(tr)
+    assert classes(found) == [("error", "decode_mid_prefill")]
+    assert f"event#{i}" in found[0].location
+
+
+def test_moved_parked_cursor_is_one_finding(traces):
+    """A mid-prefill slot's write cursor must stay parked at max_len-1;
+    advancing it means a decode wrote into a slot still being filled."""
+    tr = mutate(traces["interleaved"])
+    hit = None
+    for i, e in _decode_events(tr):
+        slot = _mid_prefill_slot(tr, i)
+        if slot is not None and slot not in e["slots"]:
+            hit = (e, slot)
+            break
+    assert hit
+    e, slot = hit
+    e["slot_lens"][slot] = 5
+    found = lint_trace(tr)
+    assert classes(found) == [("error", "decode_mid_prefill")]
+    assert f"slot {slot}" in found[0].message
+
+
+def test_gather_before_scatter_is_one_finding(cfg, params):
+    """One 25-token prompt packed into 8-token chunks: swapping the first
+    two prefill events makes a dispatch gather kv history its scatter has
+    not produced yet."""
+    arrivals = [ArrivalEvent(step=0,
+                             prompt=np.arange(1, 26, dtype=np.int32),
+                             max_new=3)]
+    tr = serve_trace(cfg, params, arrivals=arrivals, max_slots=2,
+                     policy="interleaved", pack=True)
+    assert lint_trace(tr) == []
+    tr = mutate(tr)
+    packed = [i for i, e in enumerate(tr.events)
+              if e["type"] == "prefill" and e.get("packed")]
+    assert len(packed) >= 2
+    a, b = packed[0], packed[1]
+    tr.events[a], tr.events[b] = tr.events[b], tr.events[a]
+    # keep step numbers monotone so only the kv/valid swap is the defect
+    tr.events[a]["step"], tr.events[b]["step"] = \
+        tr.events[b]["step"], tr.events[a]["step"]
+    found = lint_trace(tr)
+    assert classes(found) == [("error", "gather_before_scatter")]
+
+
+def test_superstep_refetch_reported(traces):
+    tr = mutate(traces["interleaved-knobs"])
+    by_sid = {}
+    for i, e in _decode_events(tr):
+        sid = e.get("superstep_id", -1)
+        if sid != -1:
+            by_sid.setdefault(sid, []).append(i)
+    span = next(v for v in by_sid.values() if len(v) >= 3)
+    tr.events[span[1]]["superstep_id"] = 999
+    found = lint_trace(tr)
+    assert ("error", "superstep_refetch") in classes(found)
+    # splitting the span also skews the dispatch/host-sync accounting
+    assert all(k in ("superstep_refetch", "dispatch_accounting")
+               for _, k in classes(found))
+
+
+def test_fused_unpaired_reported(traces):
+    tr = mutate(traces["interleaved-knobs"])
+    i, e = next((i, e) for i, e in _decode_events(tr) if e.get("fused"))
+    e["fused"] = False
+    found = lint_trace(tr)
+    assert ("error", "fused_unpaired") in classes(found)
+
+
+def test_dispatch_accounting_checked(traces):
+    tr = mutate(traces["serial"])
+    tr.summary["dispatch_counts"]["decode"] += 1
+    found = lint_trace(tr)
+    assert classes(found) == [("error", "dispatch_accounting")]
+
+
+# --------------------------------------------------------------------------- #
+# host-sync lint + CLI gate
+# --------------------------------------------------------------------------- #
+def test_serve_and_sched_have_no_unallowed_syncs():
+    dirs = [os.path.join(REPO, "src", "repro", "serve"),
+            os.path.join(REPO, "src", "repro", "sched")]
+    assert lint_host_syncs(dirs, root=os.path.join(REPO, "src")) == []
+
+
+def test_host_sync_lint_and_allowlist(tmp_path):
+    bad = tmp_path / "mod.py"
+    bad.write_text("import jax\n"
+                   "def f(x):\n"
+                   "    return x.item()\n"
+                   "def g(y):\n"
+                   "    jax.device_get(y)\n"
+                   "    y.block_until_ready()\n")
+    found = lint_host_syncs([str(tmp_path)], root=str(tmp_path))
+    assert classes(found) == [("error", "host_sync")] * 3
+    allow = ["mod.py::f", "mod.py::g"]
+    assert lint_host_syncs([str(tmp_path)], allow,
+                           root=str(tmp_path)) == []
+
+
+def test_cli_gate(traces, tmp_path):
+    from repro.launch.verify import main
+    tdir = tmp_path / "traces"
+    tdir.mkdir()
+    traces["interleaved-knobs"].save(str(tdir / "clean.jsonl"))
+    src = os.path.join(REPO, "src", "repro")
+    out = tmp_path / "findings.json"
+    rc = main(["--traces", str(tdir), "--src", src,
+               "--out", str(out)])
+    assert rc == 0
+    assert json.loads(out.read_text()) == []
+
+    tr = mutate(traces["serial"])
+    tr.summary["dispatch_counts"]["decode"] += 1
+    tr.save(str(tdir / "bad.jsonl"))
+    rc = main(["--traces", str(tdir), "--src", src,
+               "--out", str(out)])
+    assert rc == 1
+    dumped = json.loads(out.read_text())
+    assert any(f["class"] == "dispatch_accounting" for f in dumped)
