@@ -1,0 +1,111 @@
+"""Latency-SLO regression guard: p50/p99 TTFT and TPOT as a CI gate.
+
+Serves the same deterministic smoke workload as ``dispatch_guard`` (same
+WORKLOAD/SERVE definitions — one source of truth) with a
+``repro.obs.MetricsHub`` attached, and compares the derived SLO summary —
+p50/p99 TTFT and TPOT plus mean queue wait, all in ENGINE-CLOCK TICKS —
+against a committed baseline:
+
+    PYTHONPATH=src python benchmarks/latency_guard.py            # check
+    PYTHONPATH=src python benchmarks/latency_guard.py --record   # rebase
+
+Tick-denominated latencies are exact for a seeded workload (no wall-clock
+noise), so the guard fails on ANY regression past the recorded values: a
+scheduling change that quietly defers first tokens, stretches supersteps
+past their admission-latency budget, or lets the queue back up shows up
+here as a hard CI failure long before a wall-clock benchmark could resolve
+it. Values below baseline print a rebase hint, exactly like
+``dispatch_guard``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from dispatch_guard import SERVE, WORKLOAD, run_workload  # noqa: E402
+
+from repro.obs import MetricsHub  # noqa: E402
+from repro.trace.recorder import TraceRecorder  # noqa: E402
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "data",
+                                "latency_baseline.json")
+
+# the guarded (metric, bound) set: each must stay <= its recorded value
+GUARDED = (
+    ("ttft_ticks", "p50"), ("ttft_ticks", "p99"),
+    ("tpot_ticks", "p50"), ("tpot_ticks", "p99"),
+    ("queue_wait_ticks", "mean"),
+)
+
+
+def collect():
+    """Serve the guarded workload with live metrics attached; returns the
+    comparable latency summary."""
+    hub = MetricsHub()
+    rec = TraceRecorder(sinks=[hub])
+    counts = run_workload(recorder=rec)
+    rec.to_trace()                      # finalize: summary reaches the hub
+    s = hub.summary()
+
+    def jsonable(d):
+        return {k: list(v) if isinstance(v, tuple) else v
+                for k, v in d.items()}
+
+    return {
+        "workload": {**jsonable(WORKLOAD), "serve": jsonable(SERVE)},
+        "requests": s["requests"]["arrived"],
+        "tokens": s["requests"]["tokens_generated"],
+        "latency": {f"{m}.{q}": s[m][q] for m, q in GUARDED},
+        "summary": {m: s[m] for m in ("ttft_ticks", "tpot_ticks",
+                                      "queue_wait_ticks")},
+        "engine_counts": counts["dispatch_counts"],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--record", action="store_true",
+                    help="write the current latency summary as the new "
+                         "baseline")
+    args = ap.parse_args(argv)
+
+    cur = collect()
+    lat = cur["latency"]
+    print(f"[latency-guard] {cur['requests']} requests, "
+          f"{cur['tokens']} tokens: "
+          + "  ".join(f"{k}={v:g}" for k, v in lat.items()))
+    if args.record:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(cur, f, indent=2)
+        print(f"[latency-guard] recorded baseline -> {args.baseline}")
+        return 0
+    with open(args.baseline) as f:
+        base = json.load(f)
+    if base["workload"] != cur["workload"]:
+        print("[latency-guard] FAIL: workload definition changed — "
+              "re-record the baseline (--record)")
+        return 1
+    failures = []
+    for key, value in lat.items():
+        allowed = base["latency"][key]
+        if value > allowed:
+            failures.append(f"{key} {value:g} > baseline {allowed:g}")
+        elif value < allowed:
+            print(f"[latency-guard] {key} improved: {value:g} < "
+                  f"baseline {allowed:g} (consider --record)")
+    if failures:
+        print("[latency-guard] FAIL: " + "; ".join(failures))
+        return 1
+    print("[latency-guard] OK: within baseline "
+          + "  ".join(f"{k}<={v:g}" for k, v in base["latency"].items()))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,9 @@ config under each ``repro.sched`` policy, then lowers every recorded trace
 to PAS command streams and replays it through the simulator at paper-scale
 dims. Reports, per policy:
 
-  * TTFT (mean engine steps from arrival to first generated token),
+  * TTFT (mean engine-clock ticks from arrival to first generated token,
+    from the ``repro.obs.MetricsHub`` SLO summary — the same definition
+    the engine report, ``launch.stats`` and ``latency_guard`` use),
   * tokens per engine step and dispatch/overlap counts,
   * replayed end-to-end makespan + NPU/PIM utilization (the metric the
     overlap actually moves: an interleaved prefill chunk's NPU GEMMs run
@@ -28,24 +30,13 @@ import jax
 from repro.configs import get_arch
 from repro.models import transformer as T
 from repro.models.params import init_params
+from repro.obs import MetricsHub
 from repro.serve import ServeConfig, ServeEngine
 from repro.trace import (TraceRecorder, TraceReplayer, drive,
                          poisson_arrivals, trace_to_commands)
 
 POLICIES = ("serial", "interleaved", "pim_aware")
 FULL_DIMS = (2048, 8192)
-
-
-def ttft_steps(trace) -> float:
-    """Mean engine-step distance from a request's arrival to the decode
-    step that carried its first generated token."""
-    arrival = {e["rid"]: e["step"] for e in trace.of_type("request")}
-    first = {}
-    for e in trace.of_type("decode"):
-        for rid, _tok in e["tokens"]:
-            first.setdefault(rid, e["step"])
-    waits = [first[r] - arrival[r] for r in first]
-    return sum(waits) / len(waits) if waits else 0.0
 
 
 def main(argv=None):
@@ -74,7 +65,11 @@ def main(argv=None):
 
     rows = {}
     for pol in POLICIES:
-        rec = TraceRecorder()
+        # live metrics ride the recorder's event stream (TTFT/TPOT and the
+        # queue metrics come from the SAME MetricsHub definitions the
+        # engine-side report and launch.stats use — no ad-hoc math here)
+        hub = MetricsHub()
+        rec = TraceRecorder(sinks=[hub])
         eng = ServeEngine(cfg, params,
                           ServeConfig(max_slots=args.slots, max_len=64,
                                       prefill_chunk=args.chunk, policy=pol,
@@ -82,11 +77,13 @@ def main(argv=None):
                           recorder=rec)
         results = drive(eng, arrivals)
         trace = rec.to_trace()
+        metrics = hub.summary()
         tokens = sum(len(v) for v in results.values())
         lowered = trace_to_commands(trace, cfg=replay_cfg)
         rep = TraceReplayer().replay(lowered)
         rows[pol] = {
-            "ttft": ttft_steps(trace),
+            "ttft": metrics["ttft_ticks"]["mean"],
+            "metrics": metrics,
             "tok_per_step": tokens / max(eng.step_idx, 1),
             "results": results,
             "makespan": rep.makespan,

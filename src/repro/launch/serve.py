@@ -1,10 +1,17 @@
 """Serving launcher: batched request replay through the ServeEngine.
 
-  python -m repro.launch.serve --arch llama3.2-1b --smoke --requests 8
+  python -m repro.launch.serve --arch llama3.2-1b --smoke --requests 8 \\
+      --metrics-out metrics.json --timeline-out trace.json
+
+``--metrics-out`` attaches a live ``repro.obs.MetricsHub`` (zero extra
+dispatches / host syncs — it only observes the recorder's event stream)
+and writes the SLO report; ``--timeline-out`` writes the Perfetto
+trace-event timeline of the serve.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -13,7 +20,9 @@ import numpy as np
 from repro.configs import get_arch
 from repro.models import transformer as T
 from repro.models.params import init_params
+from repro.obs import MetricsHub, engine_events, write_chrome_trace
 from repro.serve import ServeConfig, ServeEngine
+from repro.trace import TraceRecorder
 
 
 def main(argv=None):
@@ -47,12 +56,25 @@ def main(argv=None):
     ap.add_argument("--superstep", type=int, default=1,
                     help="run up to K decode steps per dispatch when no "
                          "prefill work is pending (1 = off)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="attach a live MetricsHub and write its SLO "
+                         "report (JSON) here")
+    ap.add_argument("--timeline-out", default=None,
+                    help="write a Chrome/Perfetto trace.json of the serve "
+                         "here")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
     params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
+    # observability is a pure event-stream consumer: the hub rides the
+    # recorder's sink list, so metrics-on serving issues the exact same
+    # dispatches and host syncs as metrics-off
+    hub = rec = None
+    if args.metrics_out or args.timeline_out:
+        hub = MetricsHub()
+        rec = TraceRecorder(sinks=[hub])
     eng = ServeEngine(cfg, params,
                       ServeConfig(max_slots=args.slots,
                                   max_len=args.max_len,
@@ -62,7 +84,8 @@ def main(argv=None):
                                   max_prefill_jobs=args.prefill_jobs,
                                   decode_floor=args.decode_floor,
                                   fuse=args.fuse,
-                                  superstep=args.superstep))
+                                  superstep=args.superstep),
+                      recorder=rec)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = args.prompt_len or int(rng.integers(2, 10))
@@ -102,6 +125,22 @@ def main(argv=None):
           f"{stats['fused']} fused / {stats['overlapped']} overlapped / "
           f"{stats['serialized']} serialized / {stats['decode_only']} "
           f"decode-only steps")
+    if rec is not None:
+        trace = rec.to_trace()          # finalize: summary reaches the hub
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(hub.to_dict(), f, indent=2)
+            s = hub.summary()
+            print(f"[serve] SLO: ttft p50/p99 = "
+                  f"{s['ttft_ticks']['p50']:.1f}/{s['ttft_ticks']['p99']:.1f}"
+                  f" ticks, tpot p50/p99 = {s['tpot_ticks']['p50']:.1f}/"
+                  f"{s['tpot_ticks']['p99']:.1f} ticks")
+            print(f"[serve] wrote metrics report -> {args.metrics_out}")
+        if args.timeline_out:
+            events = engine_events(trace)
+            write_chrome_trace(args.timeline_out, events)
+            print(f"[serve] wrote {len(events)} trace events -> "
+                  f"{args.timeline_out} (load in https://ui.perfetto.dev)")
     return results
 
 

@@ -1,0 +1,143 @@
+"""Offline observability CLI: metrics report + Perfetto timeline for a
+recorded serving trace.
+
+  PYTHONPATH=src python -m repro.launch.stats benchmarks/data/smoke_trace.jsonl \\
+      --out metrics.json --timeline trace.json --replay
+
+Ingests a workload-trace JSONL (any supported schema version — older
+traces upgrade in place), feeds it through ``repro.obs.MetricsHub`` (the
+same code path live serving uses, so benchmark and engine report identical
+metric definitions), and writes:
+
+  --out       the full metrics JSON: SLO summary (p50/p95/p99 TTFT & TPOT
+              in engine-clock ticks, queue depth, slot occupancy,
+              valid-token fraction, dispatch mix), every registered
+              metric, and per-request lifecycle timelines
+  --timeline  a Chrome/Perfetto-loadable trace.json: one slice per
+              recorded dispatch (fused pairs as one slice, supersteps as
+              nested round slices), async-fetch flows, per-slot request
+              lanes, queue-depth counters — plus, with ``--replay``, the
+              simulator replay's per-unit NPU/PIM stream spans (merged
+              fused groups and pipelined superstep spans included) as a
+              second process in the same file
+
+The timeline is checked against the trace summary before it is written:
+dispatch-slice count must equal the engine's recorded dispatch total and
+resolve-slice count its host-sync total, so "covers every dispatch span"
+is enforced, not assumed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.obs import MetricsHub, dispatch_slices, engine_events, sim_events, \
+    write_chrome_trace
+from repro.trace.lower import trace_to_commands
+from repro.trace.replay import TraceReplayer
+from repro.trace.schema import Trace
+
+
+def build_report(trace: Trace) -> MetricsHub:
+    return MetricsHub().ingest(trace)
+
+
+def check_coverage(trace: Trace, events: List[dict]) -> List[str]:
+    """The timeline's coverage contract vs the trace's own summary."""
+    problems = []
+    if trace.summary is not None:
+        want = sum(trace.summary["dispatch_counts"].values())
+        got = len(dispatch_slices(events))
+        if got != want:
+            problems.append(f"timeline has {got} dispatch slices; the "
+                            f"trace summary counts {want} dispatches")
+        want_syncs = trace.summary["host_syncs"]
+        got_syncs = sum(1 for e in events if e["ph"] == "X"
+                        and e.get("cat") == "fetch")
+        if got_syncs != want_syncs:
+            problems.append(f"timeline has {got_syncs} resolve slices; the "
+                            f"trace summary counts {want_syncs} host syncs")
+    return problems
+
+
+def _print_summary(s: dict) -> None:
+    print(f"[stats] policy={s['policy']} arch={s['arch']}: "
+          f"{s['requests']['arrived']} arrived, "
+          f"{s['requests']['completed']} completed, "
+          f"{s['requests']['tokens_generated']} tokens")
+    for name in ("ttft_ticks", "tpot_ticks", "queue_wait_ticks"):
+        h = s[name]
+        print(f"[stats] {name:>16}: n={h['count']:>4} mean={h['mean']:.2f} "
+              f"p50={h['p50']:.1f} p95={h['p95']:.1f} p99={h['p99']:.1f} "
+              f"max={h['max']:.0f}")
+    print(f"[stats] queue depth mean/max: {s['queue_depth']['mean']:.2f}/"
+          f"{s['queue_depth']['max']:.0f}; slots busy mean/max: "
+          f"{s['slots_busy']['mean']:.2f}/{s['slots_busy']['max']:.0f}")
+    mix = s["dispatch_mix"]
+    print(f"[stats] dispatch mix: {mix['prefill']} prefill + "
+          f"{mix['decode']} decode + {mix['fused']} fused = {mix['total']} "
+          f"({mix['superstep_spans']} supersteps covering "
+          f"{mix['superstep_rounds']} rounds); {mix['host_syncs']} host "
+          f"syncs; valid-token fraction {s['valid_token_fraction']:.3f}")
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="metrics report + Perfetto timeline for a recorded "
+                    "serving trace")
+    ap.add_argument("trace", help="workload trace JSONL "
+                                  "(e.g. benchmarks/data/smoke_trace.jsonl)")
+    ap.add_argument("--out", default=None,
+                    help="write the metrics report JSON here")
+    ap.add_argument("--timeline", default=None,
+                    help="write a Perfetto-loadable trace.json here")
+    ap.add_argument("--replay", action="store_true",
+                    help="lower + replay the trace through the simulator "
+                         "and add its NPU/PIM stream spans to the timeline")
+    ap.add_argument("--arch", default=None,
+                    help="lower the replay at this named arch's dims "
+                         "instead of the dims recorded in the header")
+    args = ap.parse_args(argv)
+
+    trace = Trace.load(args.trace)
+    hub = build_report(trace)
+    summary = hub.summary()
+    _print_summary(summary)
+
+    report = hub.to_dict()
+    events = engine_events(trace)
+    problems = check_coverage(trace, events)
+    for p in problems:
+        print(f"[stats] COVERAGE FAIL: {p}")
+
+    if args.replay:
+        cfg = None
+        if args.arch:
+            from repro.configs import get_arch
+            cfg = get_arch(args.arch)
+        lowered = trace_to_commands(trace, cfg=cfg)
+        rep = TraceReplayer().replay(lowered)
+        report["replay"] = rep.to_dict()
+        events += sim_events(rep.result)
+        print(f"[stats] replay: makespan {rep.makespan * 1e3:.3f} ms, "
+              f"MU {rep.result.group_utilization('MU'):.1%} / "
+              f"PIM {rep.result.group_utilization('PIM'):.1%}, "
+              f"{rep.overlap_stats['groups']} overlapped groups "
+              f"({rep.overlap_stats['fused_groups']} fused), "
+              f"{rep.superstep_stats['spans']} superstep spans")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"[stats] wrote metrics report -> {args.out}")
+    if args.timeline:
+        write_chrome_trace(args.timeline, events)
+        print(f"[stats] wrote {len(events)} trace events -> {args.timeline} "
+              f"(load in https://ui.perfetto.dev)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

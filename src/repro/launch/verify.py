@@ -7,8 +7,10 @@ Three passes per ``*.jsonl`` trace under ``--traces`` (none execute device
 code): the serving-protocol lint (``verify.protocol``), the per-dispatch-
 span hazard analysis over the lowered command DAGs (``verify.hazards``),
 and the reference-DAG diff of every lowered step. Plus one AST pass over
-``<src>/serve`` and ``<src>/sched`` for host-sync calls outside the
-allowlist (default: ``<src>/verify/sync_allowlist.txt`` when present).
+``<src>/serve``, ``<src>/sched`` and ``<src>/obs`` for host-sync calls
+outside the allowlist (default: ``<src>/verify/sync_allowlist.txt`` when
+present) — observability rides the recorder's event stream and must stay
+sync-free by construction.
 
 Exit status 1 when any error-severity finding survives; ``--out`` dumps
 the full finding list as JSON (the format ``benchmarks/hazard_guard.py``
@@ -82,7 +84,8 @@ def main(argv=None) -> int:
     if os.path.exists(allow_path):
         allowlist = load_allowlist(allow_path)
     lint_dirs = [d for d in (os.path.join(args.src, "serve"),
-                             os.path.join(args.src, "sched"))
+                             os.path.join(args.src, "sched"),
+                             os.path.join(args.src, "obs"))
                  if os.path.isdir(d)]
     sync = lint_host_syncs(lint_dirs, allowlist, root=args.src)
     for f in sync:

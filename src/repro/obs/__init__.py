@@ -1,0 +1,39 @@
+"""repro.obs — serving observability: metrics, SLO summaries, timelines.
+
+Host-side only, by construction: everything in this package consumes the
+event dicts a ``trace.TraceRecorder`` emits (live, via ``sinks=``) or a
+recorded ``trace.Trace`` (offline) — never engine or device state — so
+metrics collection adds ZERO dispatches and ZERO host syncs to a serve.
+The ``repro.verify`` host-sync AST lint scans this package along with
+serve/sched, and the zero-overhead test pins dispatch/host-sync counts
+metrics-on vs metrics-off for every policy.
+
+  metrics   ``MetricsHub``: counter/gauge/histogram registry, per-request
+            lifecycle timelines (arrival -> admit -> prefill chunks ->
+            first token -> per-token decode -> completion), and the derived
+            SLO summary (p50/p95/p99 TTFT & TPOT in engine-clock ticks,
+            queue depth, slot occupancy, valid-token fraction, dispatch
+            mix) — JSON-serializable.
+  timeline  Chrome/Perfetto trace-event export: dispatch spans (fused
+            pairs as one slice, supersteps as nested round slices),
+            async-fetch flows, per-slot request lanes, queue-depth
+            counters, and simulator-replay NPU/PIM stream spans, into one
+            ``trace.json``.
+
+CLI: ``python -m repro.launch.stats <trace.jsonl>`` emits the metrics
+report and timeline for any recorded trace;
+``benchmarks/latency_guard.py`` holds p50/p99 TTFT/TPOT to a committed
+baseline in CI.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsHub,
+                               PERCENTILES, RequestLifecycle)
+from repro.obs.timeline import (PID_ENGINE, PID_SIM, PID_SLOTS, TICK_US,
+                                dispatch_slices, engine_events, sim_events,
+                                write_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsHub", "PERCENTILES",
+    "RequestLifecycle",
+    "PID_ENGINE", "PID_SIM", "PID_SLOTS", "TICK_US", "dispatch_slices",
+    "engine_events", "sim_events", "write_chrome_trace",
+]

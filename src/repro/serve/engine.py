@@ -287,7 +287,15 @@ class ServeEngine:
             recorder.bind(self)
 
     # ---- request lifecycle ------------------------------------------------- #
-    def add_request(self, prompt_tokens, max_new_tokens: int = 32) -> int:
+    def add_request(self, prompt_tokens, max_new_tokens: int = 32,
+                    arrival_step: Optional[int] = None) -> int:
+        """Queue a request. ``arrival_step`` is the TRUE open-loop arrival
+        tick when it differs from the current engine clock: a decode
+        superstep advances ``step_idx`` k ticks inside one dispatch, so an
+        arrival landing mid-span can only be injected at the span boundary
+        — the recorded ``arrival_offset`` (schema v5) preserves the real
+        arrival so TTFT/queue-wait metrics don't see arrivals batched at
+        superstep boundaries."""
         prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
         if len(prompt) == 0:
             raise ValueError("empty prompt")
@@ -298,8 +306,10 @@ class ServeEngine:
         self._next_rid += 1
         self.queue.append(Request(rid, prompt, max_new_tokens))
         if self.recorder is not None:
+            offset = 0 if arrival_step is None \
+                else max(self.step_idx - arrival_step, 0)
             self.recorder.on_request(self.step_idx, rid, len(prompt),
-                                     max_new_tokens)
+                                     max_new_tokens, arrival_offset=offset)
         return rid
 
     def free_slot_ids(self) -> List[int]:

@@ -170,7 +170,11 @@ def drive(engine, arrivals: List[ArrivalEvent],
     i = 0
     for _ in range(max_steps):
         while i < len(pending) and pending[i].step <= engine.step_idx:
-            engine.add_request(pending[i].prompt, pending[i].max_new)
+            # arrival_step records the TRUE arrival tick: when a superstep
+            # advanced the clock past it, the injection is late and the
+            # recorder keeps the sub-step offset (schema v5)
+            engine.add_request(pending[i].prompt, pending[i].max_new,
+                               arrival_step=pending[i].step)
             i += 1
         if i >= len(pending) and not engine.queue \
                 and all(r is None for r in engine.slot_req):

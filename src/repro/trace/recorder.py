@@ -6,19 +6,30 @@ requests arrive, admission waves prefill, and decode steps sample. The
 recorder is pure bookkeeping — it never forces a device sync; everything it
 stores is host data the engine already had (the per-step fetch already
 carries tokens, done flags and slot lengths in one transfer).
+
+``sinks`` streams every event (header and summary included) to observers as
+it is recorded — ``repro.obs.MetricsHub`` is the canonical sink: attach
+``TraceRecorder(sinks=[hub])`` and live metrics stay current step by step,
+at the same zero-dispatch/zero-sync cost as recording itself.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Iterable, List, Optional, Tuple
 
 from repro.trace.schema import SCHEMA_VERSION, Trace
 
 
 class TraceRecorder:
-    def __init__(self):
+    def __init__(self, sinks: Iterable = ()):
         self._engine = None
         self._header: Optional[dict] = None
         self.events: List[dict] = []
+        self.sinks = list(sinks)
+
+    def _emit(self, ev: dict) -> None:
+        self.events.append(ev)
+        for s in self.sinks:
+            s.observe(ev)
 
     # ---- engine attachment ------------------------------------------------ #
     def bind(self, engine) -> None:
@@ -51,17 +62,24 @@ class TraceRecorder:
                 "superstep": scfg.superstep,
             },
         }
+        for s in self.sinks:
+            s.observe(self._header)
 
     # ---- engine hooks ------------------------------------------------------ #
     def on_request(self, step: int, rid: int, prompt_len: int,
-                   max_new: int) -> None:
-        self.events.append({"type": "request", "step": step, "rid": rid,
-                            "prompt_len": prompt_len, "max_new": max_new})
+                   max_new: int, arrival_offset: int = 0) -> None:
+        # arrival_offset (schema v5): ticks between the request's TRUE
+        # open-loop arrival and the step the engine first saw it — nonzero
+        # when a superstep's k inner rounds advanced the clock past the
+        # arrival before the driver could inject it
+        self._emit({"type": "request", "step": step, "rid": rid,
+                    "prompt_len": prompt_len, "max_new": max_new,
+                    "arrival_offset": arrival_offset})
 
     def on_admit(self, step: int,
                  wave: List[Tuple[int, int, int]]) -> None:
-        self.events.append({"type": "admit", "step": step,
-                            "wave": [list(w) for w in wave]})
+        self._emit({"type": "admit", "step": step,
+                    "wave": [list(w) for w in wave]})
 
     def on_prefill(self, step: int, *, offset: int, chunk: int, valid: int,
                    kv: int, slots: List[int], route: dict,
@@ -74,29 +92,29 @@ class TraceRecorder:
             segments = len(slots)
         if rows is None:
             rows = len(slots)
-        self.events.append({"type": "prefill", "step": step,
-                            "offset": offset, "chunk": chunk, "valid": valid,
-                            "kv": kv, "slots": slots, "route": dict(route),
-                            "sub_batch": sub_batch, "overlap": overlap,
-                            "packed": packed, "segments": segments,
-                            "rows": rows, "fused": fused})
+        self._emit({"type": "prefill", "step": step,
+                    "offset": offset, "chunk": chunk, "valid": valid,
+                    "kv": kv, "slots": slots, "route": dict(route),
+                    "sub_batch": sub_batch, "overlap": overlap,
+                    "packed": packed, "segments": segments,
+                    "rows": rows, "fused": fused})
 
     def on_decode(self, step: int, *, occupancy: int, slot_lens: List[int],
                   slots: List[int], tokens: List[Tuple[int, int]],
                   route: dict, overlap: bool = False, fused: bool = False,
                   superstep: int = 1, superstep_id: int = -1) -> None:
-        self.events.append({"type": "decode", "step": step,
-                            "occupancy": occupancy, "slot_lens": slot_lens,
-                            "slots": slots,
-                            "tokens": [list(t) for t in tokens],
-                            "route": dict(route), "overlap": overlap,
-                            "fused": fused, "superstep": superstep,
-                            "superstep_id": superstep_id})
+        self._emit({"type": "decode", "step": step,
+                    "occupancy": occupancy, "slot_lens": slot_lens,
+                    "slots": slots,
+                    "tokens": [list(t) for t in tokens],
+                    "route": dict(route), "overlap": overlap,
+                    "fused": fused, "superstep": superstep,
+                    "superstep_id": superstep_id})
 
     def on_complete(self, step: int, rid: int, reason: str,
                     n_generated: int) -> None:
-        self.events.append({"type": "complete", "step": step, "rid": rid,
-                            "reason": reason, "n_generated": n_generated})
+        self._emit({"type": "complete", "step": step, "rid": rid,
+                    "reason": reason, "n_generated": n_generated})
 
     # ---- export ------------------------------------------------------------ #
     def _summary(self) -> Optional[dict]:
@@ -108,13 +126,20 @@ class TraceRecorder:
                 "host_syncs": e.host_syncs,
                 "prefill_stats": dict(e.prefill_stats),
                 "decode_deferrals": e.decode_deferrals,
-                "superstep_tokens": e.superstep_tokens}
+                "superstep_tokens": e.superstep_tokens,
+                "sched_stats": dict(e.scheduler.stats)}
 
     def to_trace(self) -> Trace:
         if self._header is None:
             raise RuntimeError("recorder was never bound to an engine")
+        summary = self._summary()
+        if summary is not None:
+            # sinks see the summary too (idempotent for MetricsHub: the
+            # latest engine counters simply replace the previous snapshot)
+            for s in self.sinks:
+                s.observe(summary)
         return Trace(header=dict(self._header), events=list(self.events),
-                     summary=self._summary()).validate()
+                     summary=summary).validate()
 
     def save(self, path) -> Trace:
         tr = self.to_trace()

@@ -61,6 +61,18 @@ Version history:
        per-step events one superstep expands into share it; -1 = plain).
        Loading a v1/v2/v3 trace upgrades in place: fused=False,
        superstep=1, superstep_id=-1, fuse=False, header superstep=1.
+  v5 — superstep-aware trace clocks (observability): ``request`` events
+       carry ``arrival_offset`` — the engine-clock ticks between the
+       request's TRUE open-loop arrival and the step the engine first saw
+       it. Arrivals inject only between scheduler steps, so a decode
+       superstep's k inner rounds advance the clock past any arrival that
+       lands mid-span; without the offset every such arrival appears
+       batched at the superstep boundary and TTFT under-reports by up to
+       k-1 ticks. ``summary`` gains optional ``sched_stats`` (the
+       scheduler's per-step-kind tick counts: overlapped / fused /
+       superstep / serialized / ...). Loading a v1-v4 trace upgrades in
+       place: arrival_offset=0 (arrival == injection, the pre-v5
+       semantics).
 """
 from __future__ import annotations
 
@@ -70,8 +82,8 @@ from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 
-SCHEMA_VERSION = 4
-SUPPORTED_VERSIONS = (1, 2, 3, 4)
+SCHEMA_VERSION = 5
+SUPPORTED_VERSIONS = (1, 2, 3, 4, 5)
 
 # required keys per event type (beyond "type")
 _REQUIRED: Dict[str, tuple] = {
@@ -95,6 +107,10 @@ _REQUIRED_V3: Dict[str, tuple] = {
 _REQUIRED_V4: Dict[str, tuple] = {
     "prefill": ("fused",),
     "decode": ("fused", "superstep", "superstep_id"),
+}
+# additional keys required from v5 on
+_REQUIRED_V5: Dict[str, tuple] = {
+    "request": ("arrival_offset",),
 }
 _MODEL_KEYS = ("num_layers", "d_model", "num_heads", "num_kv_heads",
                "head_dim", "d_ff", "vocab_size")
@@ -125,6 +141,8 @@ def validate_event(ev: dict, version: int = SCHEMA_VERSION) -> dict:
         required = required + _REQUIRED_V3.get(t, ())
     if version >= 4:
         required = required + _REQUIRED_V4.get(t, ())
+    if version >= 5:
+        required = required + _REQUIRED_V5.get(t, ())
     missing = [k for k in required if k not in ev]
     if missing:
         raise TraceSchemaError(f"{t} event missing keys {missing}: {ev!r}")
@@ -183,6 +201,11 @@ def upgrade_event(ev: dict, version: int) -> dict:
         elif ev["type"] == "header":
             ev["serve"].setdefault("fuse", False)
             ev["serve"].setdefault("superstep", 1)
+    if version < 5:
+        # pre-observability semantics: the recorded step IS the arrival
+        # (no superstep-span sub-step offsets were tracked)
+        if ev["type"] == "request":
+            ev.setdefault("arrival_offset", 0)
     return ev
 
 

@@ -250,23 +250,26 @@ def test_choose_superstep_from_queue_state(setup):
 
 
 # --------------------------------------------------------------------------- #
-# schema v4: round-trip + v1/v2/v3 upgrade in place
+# schema v5: round-trip + v1/v2/v3/v4 upgrade in place
 # --------------------------------------------------------------------------- #
 def _downgrade(trace: Trace, version: int) -> str:
-    """Strip the fields a pre-v4 (and optionally pre-v3/v2) recorder would
-    not have written."""
+    """Strip the fields a pre-v5 (and optionally pre-v4/v3/v2) recorder
+    would not have written."""
     header = json.loads(json.dumps(trace.header))
     header["version"] = version
-    drop_serve = {3: ("fuse", "superstep"),
+    drop_serve = {4: (),
+                  3: ("fuse", "superstep"),
                   2: ("fuse", "superstep", "pack", "max_prefill_jobs",
                       "decode_floor"),
                   1: ("fuse", "superstep", "pack", "max_prefill_jobs",
                       "decode_floor", "policy", "sub_batch")}[version]
-    drop_ev = {3: ("fused", "superstep", "superstep_id"),
-               2: ("fused", "superstep", "superstep_id", "packed",
-                   "segments", "rows"),
-               1: ("fused", "superstep", "superstep_id", "packed",
-                   "segments", "rows", "sub_batch", "overlap")}[version]
+    drop_ev = {4: ("arrival_offset",),
+               3: ("arrival_offset", "fused", "superstep", "superstep_id"),
+               2: ("arrival_offset", "fused", "superstep", "superstep_id",
+                   "packed", "segments", "rows"),
+               1: ("arrival_offset", "fused", "superstep", "superstep_id",
+                   "packed", "segments", "rows", "sub_batch",
+                   "overlap")}[version]
     for key in drop_serve:
         header["serve"].pop(key, None)
     lines = [json.dumps(header)]
@@ -280,9 +283,10 @@ def _downgrade(trace: Trace, version: int) -> str:
     return "\n".join(lines) + "\n"
 
 
-def test_schema_v4_roundtrip(fused_superstep_serve, tmp_path):
+def test_schema_v5_roundtrip(fused_superstep_serve, tmp_path):
     tr = fused_superstep_serve[1].to_trace()
-    assert tr.version == 4
+    assert tr.version == 5
+    assert all("arrival_offset" in e for e in tr.of_type("request"))
     assert tr.header["serve"]["fuse"] is True
     assert tr.header["serve"]["superstep"] == 4
     assert any(e["fused"] for e in tr.of_type("prefill"))
@@ -297,16 +301,18 @@ def test_schema_v4_roundtrip(fused_superstep_serve, tmp_path):
     assert tr2.summary == tr.summary
 
 
-@pytest.mark.parametrize("version", (1, 2, 3))
-def test_pre_v4_traces_upgrade_in_place(baseline, version):
-    """v1/v2/v3 traces load, upgrade to v4 semantics (fused=False,
-    superstep=1/-1, header fuse=False), and lower to identical command
-    streams as their v4 serial twin."""
+@pytest.mark.parametrize("version", (1, 2, 3, 4))
+def test_pre_v5_traces_upgrade_in_place(baseline, version):
+    """v1/v2/v3/v4 traces load, upgrade to current semantics (fused=False,
+    superstep=1/-1, header fuse=False, arrival_offset=0), and lower to
+    identical command streams as their current-schema serial twin."""
     tr4 = baseline[1].to_trace()
     old = Trace.loads(_downgrade(tr4, version))
     assert old.version == version
     assert old.header["serve"]["fuse"] is False
     assert old.header["serve"]["superstep"] == 1
+    for e in old.of_type("request"):
+        assert e["arrival_offset"] == 0
     for e in old.of_type("prefill"):
         assert e["fused"] is False
     for e in old.of_type("decode"):

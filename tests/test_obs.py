@@ -1,0 +1,339 @@
+"""Observability layer: MetricsHub SLO metrics, the Perfetto timeline
+exporter, schema v5 arrival offsets, and the zero-overhead contract."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.obs import (PERCENTILES, Counter, Gauge, Histogram, MetricsHub,
+                       dispatch_slices, engine_events, sim_events,
+                       write_chrome_trace)
+from repro.obs.timeline import PID_ENGINE, PID_SIM, TICK_US
+from repro.serve import ServeConfig, ServeEngine
+from repro.trace import (Trace, TraceRecorder, TraceReplayer, drive,
+                         poisson_arrivals, trace_to_commands)
+from repro.trace.schema import (SCHEMA_VERSION, TraceSchemaError,
+                                upgrade_event, validate_event)
+
+KEY = jax.random.PRNGKey(0)
+POLICIES = ("serial", "interleaved", "pim_aware")
+FULL_DIMS = (2048, 8192)
+SMOKE_TRACE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                           "data", "smoke_trace.jsonl")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_params(T.param_defs(cfg), KEY)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def arrivals(setup):
+    cfg, _ = setup
+    return poisson_arrivals(0.5, 24, vocab=cfg.vocab_size,
+                            prompt_len=(2, 40), max_new=(3, 8), seed=1)
+
+
+def _scfg(policy, **kw):
+    base = dict(max_slots=4, max_len=64, prefill_chunk=8, policy=policy,
+                map_dims=FULL_DIMS)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _serve(cfg, params, policy, arrivals, *, hub=None, **kw):
+    rec = TraceRecorder(sinks=[hub] if hub is not None else ())
+    eng = ServeEngine(cfg, params, _scfg(policy, **kw), recorder=rec)
+    results = drive(eng, arrivals)
+    return eng, rec, results
+
+
+@pytest.fixture(scope="module")
+def mixed_serve(setup, arrivals):
+    """One serve exercising everything at once: interleaved + pack + fuse +
+    superstep, with a live MetricsHub on the recorder's sink list."""
+    cfg, params = setup
+    hub = MetricsHub()
+    eng, rec, results = _serve(cfg, params, "interleaved", arrivals, hub=hub,
+                               pack=True, fuse=True, superstep=4)
+    trace = rec.to_trace()
+    return eng, trace, results, hub
+
+
+# --------------------------------------------------------------------------- #
+# zero overhead: metrics NEVER change what the engine dispatches
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("fuse,superstep", [(False, 1), (True, 4)])
+def test_metrics_zero_overhead(setup, arrivals, policy, fuse, superstep):
+    """A metrics-enabled serve issues EXACTLY the dispatches and host syncs
+    of a metrics-off serve — the hub only observes the recorder's event
+    stream, it never touches the engine or the device."""
+    cfg, params = setup
+    kw = dict(pack=True, fuse=fuse, superstep=superstep)
+    eng_off, _, res_off = _serve(cfg, params, policy, arrivals, **kw)
+    hub = MetricsHub()
+    eng_on, _, res_on = _serve(cfg, params, policy, arrivals, hub=hub, **kw)
+    assert eng_on.dispatch_counts == eng_off.dispatch_counts
+    assert eng_on.host_syncs == eng_off.host_syncs
+    assert eng_on.step_idx == eng_off.step_idx
+    assert res_on == res_off
+    # and the hub actually saw the serve
+    assert hub.counter("requests_arrived").value == len(arrivals)
+
+
+def test_hub_mix_matches_engine_counters(mixed_serve):
+    """The event-derived dispatch mix reproduces the engine's own counters
+    (same closed forms the protocol lint enforces)."""
+    eng, _trace, _results, hub = mixed_serve
+    mix = hub.dispatch_mix()
+    assert {k: mix[k] for k in ("prefill", "decode", "fused")} \
+        == dict(eng.dispatch_counts)
+    assert mix["host_syncs"] == eng.host_syncs
+    assert mix["superstep_spans"] == eng.scheduler.stats["superstep"]
+    assert mix["superstep_rounds"] == eng.superstep_tokens
+
+
+# --------------------------------------------------------------------------- #
+# live == offline: one code path, identical metrics
+# --------------------------------------------------------------------------- #
+def test_live_equals_offline(mixed_serve, tmp_path):
+    """Ingesting the saved-and-reloaded JSONL yields the same report as the
+    live sink — benchmark and engine metrics share one definition."""
+    _eng, trace, _results, hub_live = mixed_serve
+    path = tmp_path / "t.jsonl"
+    trace.save(path)
+    hub_off = MetricsHub().ingest(Trace.load(path))
+    assert hub_off.summary() == hub_live.summary()
+    assert hub_off.to_dict() == hub_live.to_dict()
+
+
+def test_lifecycles_complete(mixed_serve):
+    _eng, _trace, results, hub = mixed_serve
+    s = hub.summary()
+    assert s["requests"]["completed"] == len(results)
+    assert s["requests"]["tokens_generated"] == \
+        sum(len(v) for v in results.values())
+    for lc in hub.requests.values():
+        assert lc.arrival <= lc.injected <= lc.admit
+        assert lc.admit <= lc.first_token <= lc.last_token <= lc.complete
+        assert lc.n_tokens == len(results[lc.rid])
+        assert lc.ttft == lc.first_token - lc.arrival
+
+
+def test_ttft_matches_adhoc_definition(setup, arrivals):
+    """On a superstep-free serve (offset-free arrivals), the hub's TTFT is
+    the classic first-token-step - arrival-step, recomputed here by hand
+    from the raw event stream."""
+    cfg, params = setup
+    hub = MetricsHub()
+    _eng, rec, _results = _serve(cfg, params, "interleaved", arrivals,
+                                 hub=hub)
+    trace = rec.to_trace()
+    arrived, first = {}, {}
+    for ev in trace.events:
+        if ev["type"] == "request":
+            assert ev["arrival_offset"] == 0     # no supersteps -> no skew
+            arrived[ev["rid"]] = ev["step"]
+        elif ev["type"] == "decode":
+            for rid, _tok in ev["tokens"]:
+                first.setdefault(rid, ev["step"])
+    want = sorted(first[r] - arrived[r] for r in first)
+    got = sorted(lc.ttft for lc in hub.requests.values())
+    assert got == want
+    assert hub.histogram("ttft_ticks").summary()["mean"] \
+        == pytest.approx(np.mean(want))
+
+
+# --------------------------------------------------------------------------- #
+# schema v5: superstep-aware arrival offsets
+# --------------------------------------------------------------------------- #
+def test_arrival_offsets_recorded_under_supersteps(mixed_serve):
+    """With superstep=4, some open-loop arrivals land while the clock jumps
+    k ticks; the recorder keeps the true arrival via arrival_offset and the
+    hub dates TTFT from it."""
+    _eng, trace, _results, hub = mixed_serve
+    offsets = [ev["arrival_offset"] for ev in trace.events
+               if ev["type"] == "request"]
+    assert offsets and all(o >= 0 for o in offsets)
+    assert any(o > 0 for o in offsets), \
+        "superstep serve should skew at least one arrival"
+    for ev in trace.events:
+        if ev["type"] == "request" and ev["arrival_offset"] > 0:
+            lc = hub.requests[ev["rid"]]
+            assert lc.arrival == ev["step"] - ev["arrival_offset"]
+            assert lc.injected == ev["step"]
+
+
+def test_schema_v5_requires_and_upgrades_arrival_offset():
+    ev = {"type": "request", "step": 3, "rid": 0, "prompt_len": 4,
+          "max_new": 8}
+    with pytest.raises(TraceSchemaError):
+        validate_event(dict(ev), SCHEMA_VERSION)
+    for old in (1, 2, 3, 4):
+        up = upgrade_event(dict(ev), old)
+        assert up["arrival_offset"] == 0
+    ok = dict(ev, arrival_offset=2)
+    assert validate_event(dict(ok), SCHEMA_VERSION) == ok
+
+
+# --------------------------------------------------------------------------- #
+# metric primitives
+# --------------------------------------------------------------------------- #
+def test_histogram_percentiles_match_numpy(rng):
+    h = Histogram("x")
+    samples = rng.gamma(2.0, 10.0, size=257)
+    for s in samples:
+        h.observe(s)
+    for q in (*PERCENTILES, 10.0, 75.0):
+        assert h.percentile(q) == pytest.approx(np.percentile(samples, q))
+    s = h.summary()
+    assert s["count"] == 257
+    assert s["mean"] == pytest.approx(samples.mean())
+    for q in PERCENTILES:
+        assert s[f"p{q:g}"] == pytest.approx(np.percentile(samples, q))
+
+
+def test_histogram_empty_summary():
+    s = Histogram("x").summary()
+    assert s["count"] == 0 and s["p99"] == 0.0
+
+
+def test_gauge_time_weighted_mean():
+    g = Gauge("g")
+    g.set(0, 2.0)      # holds 2 for 4 ticks
+    g.set(4, 6.0)      # holds 6 for 2 ticks
+    g.set(6, 0.0)
+    assert g.time_weighted_mean() == pytest.approx((2 * 4 + 6 * 2) / 6)
+    assert g.max() == 6.0 and g.value == 0.0
+    g.set(6, 3.0)      # same-tick update replaces, not appends
+    assert g.value == 3.0
+
+
+def test_registry_type_guard():
+    hub = MetricsHub()
+    hub.counter("n").inc(3)
+    assert hub.counter("n").value == 3          # get-or-create is idempotent
+    with pytest.raises(TypeError):
+        hub.gauge("n")
+    assert isinstance(Counter("c"), Counter)
+
+
+# --------------------------------------------------------------------------- #
+# timeline: the coverage contract
+# --------------------------------------------------------------------------- #
+def test_timeline_covers_every_dispatch(mixed_serve):
+    """Exactly one cat="dispatch" slice per dispatch the engine counted:
+    fused pairs ONE slice, a superstep span ONE slice (its rounds are
+    cat="round"), and one cat="fetch" resolve per host sync."""
+    eng, trace, _results, _hub = mixed_serve
+    events = engine_events(trace)
+    slices = dispatch_slices(events)
+    assert len(slices) == sum(eng.dispatch_counts.values())
+    names = [e["name"] for e in slices]
+    assert names.count("fused prefill+decode") == eng.dispatch_counts["fused"]
+    sup = [e for e in slices if e["name"].startswith("superstep")]
+    assert len(sup) == eng.scheduler.stats["superstep"]
+    rounds = [e for e in events if e.get("cat") == "round"]
+    assert len(rounds) == eng.superstep_tokens
+    fetches = [e for e in events if e["ph"] == "X" and e.get("cat") == "fetch"]
+    assert len(fetches) == eng.host_syncs
+
+
+def test_timeline_superstep_nesting(mixed_serve):
+    """Every inner round slice lies inside its superstep's outer slice and
+    the outer slice spans k ticks."""
+    _eng, trace, _results, _hub = mixed_serve
+    events = engine_events(trace)
+    outers = [e for e in dispatch_slices(events)
+              if e["name"].startswith("superstep")]
+    rounds = [e for e in events if e.get("cat") == "round"]
+    assert outers
+    for o in outers:
+        inner = [r for r in rounds
+                 if o["ts"] <= r["ts"]
+                 and r["ts"] + r["dur"] <= o["ts"] + o["dur"] + 1e-9]
+        assert len(inner) == o["args"]["rounds"]
+        # the span covers from its first round's tick to its last's end
+        assert o["dur"] >= (o["args"]["rounds"] - 1) * TICK_US
+
+
+def test_timeline_well_formed_and_serializable(mixed_serve, tmp_path):
+    _eng, trace, _results, _hub = mixed_serve
+    events = engine_events(trace)
+    for e in events:
+        assert e["ph"] in ("X", "M", "C", "s", "f")
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+            assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+    # flow arrows pair up: one "s" and one "f" per id
+    starts = [e["id"] for e in events if e["ph"] == "s"]
+    ends = [e["id"] for e in events if e["ph"] == "f"]
+    assert sorted(starts) == sorted(ends)
+    path = tmp_path / "trace.json"
+    write_chrome_trace(path, events)
+    with open(path) as f:
+        d = json.load(f)
+    assert d["traceEvents"] == events
+
+
+def test_sim_events_from_replay(mixed_serve):
+    """A simulator replay of the same trace drops into the timeline as one
+    slice per SimResult span, on per-unit tracks under the sim pid."""
+    _eng, trace, _results, _hub = mixed_serve
+    rep = TraceReplayer().replay(trace_to_commands(trace))
+    events = sim_events(rep.result)
+    slices = [e for e in events if e["ph"] == "X"]
+    assert len(slices) == len(rep.result.trace)
+    assert all(e["pid"] == PID_SIM and e["cat"] == "sim" for e in slices)
+    units = {e["args"]["unit"] for e in slices}
+    assert units == {u for _s, _e, u, _n, _t in rep.result.trace}
+
+
+# --------------------------------------------------------------------------- #
+# CLIs: stats + latency guard on the committed artifacts
+# --------------------------------------------------------------------------- #
+def test_stats_cli_on_committed_trace(tmp_path):
+    from repro.launch.stats import main
+    out = tmp_path / "m.json"
+    tl = tmp_path / "t.json"
+    assert main([SMOKE_TRACE, "--out", str(out), "--timeline", str(tl)]) == 0
+    report = json.loads(out.read_text())
+    assert {"summary", "metrics", "requests"} <= set(report)
+    assert report["summary"]["dispatch_mix"]["total"] \
+        == sum(report["summary"]["engine"]["dispatch_counts"].values())
+    assert json.loads(tl.read_text())["traceEvents"]
+
+
+def test_stats_coverage_check_catches_missing_slices():
+    from repro.launch.stats import check_coverage
+    trace = Trace.load(SMOKE_TRACE)
+    events = engine_events(trace)
+    good = check_coverage(trace, events)
+    assert good == []
+    broken = [e for e in events if not (e["ph"] == "X"
+                                        and e.get("cat") == "dispatch")]
+    problems = check_coverage(trace, broken)
+    assert problems and "dispatch slices" in problems[0]
+
+
+def test_latency_guard_within_committed_baseline():
+    import importlib.util
+    bench = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+    import sys
+    sys.path.insert(0, bench)
+    try:
+        spec = importlib.util.spec_from_file_location(
+            "latency_guard", os.path.join(bench, "latency_guard.py"))
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        assert mod.main([]) == 0
+    finally:
+        sys.path.remove(bench)
