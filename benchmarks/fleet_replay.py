@@ -1,0 +1,167 @@
+"""Fleet routing comparison + CI guard: least-loaded vs round-robin.
+
+Serves ONE bursty open-loop arrival stream (the queueing-stress process
+from ``trace/arrivals.py``) through a 2-replica fleet under each routing
+policy — same engines, same ``dispatch_guard`` SERVE shape, same seeded
+stream — and compares fleet-level SLO numbers (``FleetMetrics``: merged
+histograms, so every percentile is exact over the raw per-request
+samples):
+
+    PYTHONPATH=src python benchmarks/fleet_replay.py            # check
+    PYTHONPATH=src python benchmarks/fleet_replay.py --record   # rebase
+    PYTHONPATH=src python benchmarks/fleet_replay.py --out cmp.json
+
+Two gates, both CI-fatal:
+
+  * the ROUTING INVARIANT: least_loaded must come in at or under
+    round_robin on fleet p99 TTFT for this workload — load-aware routing
+    that loses to a blind counter means the load signal broke;
+  * per-policy guarded metrics (p50/p99 TTFT, p99 queue wait) must stay
+    <= the committed ``data/fleet_baseline.json`` (tick-exact, so any
+    regression is a hard failure, same as ``latency_guard``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from dispatch_guard import SERVE  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.fleet import FleetMetrics, serve_fleet  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.models.params import init_params  # noqa: E402
+from repro.serve import ServeConfig  # noqa: E402
+from repro.trace.arrivals import bursty_arrivals  # noqa: E402
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "data",
+                                "fleet_baseline.json")
+
+REPLICAS = 2
+POLICIES = ("round_robin", "least_loaded", "prefix_affinity")
+
+# the guarded bursty workload — change it and the baseline must be
+# re-recorded (SERVE is imported from dispatch_guard: one source of truth
+# for the smoke serve shape)
+WORKLOAD = dict(rate=1.0, horizon=72, burst=12, idle=12,
+                prompt_len=(2, 40), max_new=(3, 10), seed=7)
+
+# per-policy (metric, quantile) bounds held to the baseline
+GUARDED = (("ttft_ticks", "p50"), ("ttft_ticks", "p99"),
+           ("queue_wait_ticks", "p99"))
+
+
+def run_policies():
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
+    arrivals = bursty_arrivals(WORKLOAD["rate"], WORKLOAD["horizon"],
+                               vocab=cfg.vocab_size,
+                               burst=WORKLOAD["burst"],
+                               idle=WORKLOAD["idle"],
+                               prompt_len=WORKLOAD["prompt_len"],
+                               max_new=WORKLOAD["max_new"],
+                               seed=WORKLOAD["seed"])
+    out = {}
+    for routing in POLICIES:
+        fleet = serve_fleet(cfg, params, ServeConfig(**SERVE), arrivals,
+                            replicas=REPLICAS, routing=routing)
+        fm = FleetMetrics()
+        for node, hub in fleet.hubs.items():
+            fm.add(node, hub)
+        s = fm.summary()
+        out[routing] = {
+            "requests": s["requests"]["arrived"],
+            "tokens": s["requests"]["tokens_generated"],
+            "latency": {f"{m}.{q}": s[m][q] for m, q in GUARDED},
+            "ttft_ticks": s["ttft_ticks"],
+            "tpot_ticks": s["tpot_ticks"],
+            "queue_wait_ticks": s["queue_wait_ticks"],
+            "imbalance": s["imbalance"],
+        }
+    return out
+
+
+def collect():
+    def jsonable(d):
+        return {k: list(v) if isinstance(v, tuple) else v
+                for k, v in d.items()}
+
+    return {
+        "workload": {**jsonable(WORKLOAD), "serve": jsonable(SERVE),
+                     "replicas": REPLICAS},
+        "policies": run_policies(),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--record", action="store_true",
+                    help="write the current comparison as the new baseline")
+    ap.add_argument("--out", default=None,
+                    help="also write the full comparison JSON here (CI "
+                         "artifact)")
+    args = ap.parse_args(argv)
+
+    cur = collect()
+    for routing, r in cur["policies"].items():
+        print(f"[fleet-replay] {routing:>15}: "
+              + "  ".join(f"{k}={v:g}" for k, v in r["latency"].items())
+              + f"  share="
+              + "/".join(f"{v:.2f}"
+                         for v in r["imbalance"]["request_share"].values()))
+
+    # the routing invariant is checked on every run, --record included:
+    # a baseline must never be recorded with load-aware routing losing
+    ll = cur["policies"]["least_loaded"]["latency"]["ttft_ticks.p99"]
+    rr = cur["policies"]["round_robin"]["latency"]["ttft_ticks.p99"]
+    if ll > rr:
+        print(f"[fleet-replay] FAIL: least_loaded p99 TTFT {ll:g} > "
+              f"round_robin {rr:g} — load-aware routing lost to the blind "
+              f"counter")
+        return 1
+    print(f"[fleet-replay] routing invariant OK: least_loaded p99 TTFT "
+          f"{ll:g} <= round_robin {rr:g}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(cur, f, indent=2)
+        print(f"[fleet-replay] wrote comparison -> {args.out}")
+    if args.record:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(cur, f, indent=2)
+        print(f"[fleet-replay] recorded baseline -> {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    if base["workload"] != cur["workload"]:
+        print("[fleet-replay] FAIL: workload definition changed — "
+              "re-record the baseline (--record)")
+        return 1
+    failures = []
+    for routing in POLICIES:
+        for key, value in cur["policies"][routing]["latency"].items():
+            allowed = base["policies"][routing]["latency"][key]
+            if value > allowed:
+                failures.append(f"{routing} {key} {value:g} > "
+                                f"baseline {allowed:g}")
+            elif value < allowed:
+                print(f"[fleet-replay] {routing} {key} improved: {value:g} "
+                      f"< baseline {allowed:g} (consider --record)")
+    if failures:
+        print("[fleet-replay] FAIL: " + "; ".join(failures))
+        return 1
+    print("[fleet-replay] OK: all policies within baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

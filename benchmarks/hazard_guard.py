@@ -4,8 +4,9 @@ Serves the same deterministic smoke workload as ``dispatch_guard`` (same
 WORKLOAD/SERVE definitions — one source of truth), records the trace, and
 runs every ``repro.verify`` pass over it: the serving-protocol lint, the
 per-dispatch-span hazard analysis, the reference-DAG diff of each lowered
-step, and the host-sync AST lint over ``repro.{serve,sched,obs}``. Finding
-counts per (severity, class) are compared against a recorded baseline:
+step, and the host-sync AST lint over ``repro.{serve,sched,obs,fleet}``.
+Finding counts per (severity, class) are compared against a recorded
+baseline:
 
     PYTHONPATH=src python benchmarks/hazard_guard.py            # check
     PYTHONPATH=src python benchmarks/hazard_guard.py --record   # rebase
@@ -59,7 +60,7 @@ def collect_findings():
         allowlist = load_allowlist(allow_path)
     findings.extend(lint_host_syncs(
         [os.path.join(SRC_ROOT, "serve"), os.path.join(SRC_ROOT, "sched"),
-         os.path.join(SRC_ROOT, "obs")],
+         os.path.join(SRC_ROOT, "obs"), os.path.join(SRC_ROOT, "fleet")],
         allowlist, root=SRC_ROOT))
     return findings, trace
 

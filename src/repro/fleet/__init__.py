@@ -1,0 +1,45 @@
+"""repro.fleet — multi-replica serving replay behind a load balancer.
+
+The ROADMAP north star is serving heavy traffic from many users, which
+means N IANUS nodes behind a router, not one engine. This package replays
+ONE open-loop arrival stream (``trace/arrivals.py`` generators) through N
+``ServeEngine`` replicas on a shared fleet clock, with the arrival->replica
+assignment decided by a pluggable routing policy:
+
+  round_robin      gid mod N — the baseline balancer
+  least_loaded     argmin over replicas of queue depth + busy slots (the
+                   ``ServeEngine.load_stats`` router hook), ties to the
+                   lowest node id — deterministic by construction
+  prefix_affinity  crc32 of the prompt's first k tokens mod N — requests
+                   sharing a prefix land on the same node (the hook for
+                   cross-request prefix/page reuse)
+
+Every replica records through its own ``TraceRecorder`` (schema v6 headers
+carry ``node_id`` + the fleet shape) with a ``MetricsHub`` sink, exactly as
+single-node serving does — per-replica observability stays zero-dispatch /
+zero-sync, and each replica's trace passes the ``repro.verify`` protocol
+lint on its own. ``FleetMetrics`` then aggregates the per-replica hubs
+LOSSLESSLY (``MetricsHub.merge``: histogram samples concatenate, gauges sum
+as step functions over the fleet clock) into fleet-exact p50/p95/p99
+TTFT/TPOT/queue-wait plus load-imbalance stats, and rolls per-replica
+``TraceReplayer`` runs up into per-node and fleet NPU/PIM utilization.
+
+The dispatch-parity invariant (tested): an engine serving its routed subset
+inside the fleet issues EXACTLY the dispatches, host syncs and greedy
+tokens it would serving that subset alone — the fleet clock only gates when
+arrivals become visible, never what an engine does with them.
+
+CLI: ``python -m repro.launch.fleet --replicas N --routing P``;
+``benchmarks/fleet_replay.py`` compares routing policies on the bursty
+trace and guards least_loaded <= round_robin on fleet p99 TTFT in CI.
+"""
+from repro.fleet.metrics import FleetMetrics
+from repro.fleet.replayer import FleetResult, serve_fleet
+from repro.fleet.router import (ROUTING_POLICIES, LeastLoaded,
+                                PrefixAffinity, RoundRobin, make_router)
+
+__all__ = [
+    "FleetMetrics", "FleetResult", "serve_fleet",
+    "ROUTING_POLICIES", "LeastLoaded", "PrefixAffinity", "RoundRobin",
+    "make_router",
+]

@@ -1,0 +1,110 @@
+"""Routing policies: which replica serves the next arrival.
+
+A router is pure host-side bookkeeping — it reads prompts and
+``ServeEngine.load_stats()`` (queue depth + slot occupancy, both plain
+host state) and returns a node id. It never touches device state, so
+routing adds zero dispatches and zero host syncs to any replica.
+
+Determinism is part of the contract: every policy is a pure function of
+(arrival order, prompt bytes, engine load), with ties broken by lowest
+node id — the same seeded workload always routes the same way, which is
+what lets ``benchmarks/fleet_replay.py`` hold routing comparisons to a
+committed baseline.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import List, Sequence
+
+import numpy as np
+
+ROUTING_POLICIES = ("round_robin", "least_loaded", "prefix_affinity")
+
+
+class Router:
+    """Base: ``route(prompt, engines) -> node id`` in [0, replicas)."""
+
+    name = "base"
+
+    def __init__(self, replicas: int):
+        if replicas < 1:
+            raise ValueError(f"need at least 1 replica, got {replicas}")
+        self.replicas = replicas
+
+    def route(self, prompt: np.ndarray, engines: Sequence) -> int:
+        raise NotImplementedError
+
+
+class RoundRobin(Router):
+    """Arrival i -> node i mod N, independent of load and content."""
+
+    name = "round_robin"
+
+    def __init__(self, replicas: int):
+        super().__init__(replicas)
+        self._next = 0
+
+    def route(self, prompt: np.ndarray, engines: Sequence) -> int:
+        node = self._next
+        self._next = (self._next + 1) % self.replicas
+        return node
+
+
+class LeastLoaded(Router):
+    """argmin over replicas of (queued + busy slots). Ties break first by
+    fewest requests routed so far, then by lowest node id — fully
+    deterministic (a pure function of engine load + routing history), and
+    free of the tie-to-node-0 pathology where every odd-sized burst
+    arriving at an idle fleet hands node 0 the extra request."""
+
+    name = "least_loaded"
+
+    def __init__(self, replicas: int):
+        super().__init__(replicas)
+        self._routed = [0] * replicas
+
+    def route(self, prompt: np.ndarray, engines: Sequence) -> int:
+        loads = []
+        for node, eng in enumerate(engines):
+            st = eng.load_stats()
+            loads.append((st["queued"] + st["busy"],
+                          self._routed[node], node))
+        node = min(loads)[2]
+        self._routed[node] += 1
+        return node
+
+
+class PrefixAffinity(Router):
+    """Hash the prompt's first ``prefix_len`` tokens -> node, so requests
+    sharing a prefix (same system prompt) land on the same replica — the
+    routing hook the ROADMAP's cross-request prefix/page reuse needs.
+    ``zlib.crc32`` over the token bytes, not Python ``hash``: stable
+    across processes regardless of PYTHONHASHSEED."""
+
+    name = "prefix_affinity"
+
+    def __init__(self, replicas: int, prefix_len: int = 8):
+        super().__init__(replicas)
+        if prefix_len < 1:
+            raise ValueError(f"prefix_len must be >= 1, got {prefix_len}")
+        self.prefix_len = prefix_len
+
+    def route(self, prompt: np.ndarray, engines: Sequence) -> int:
+        prefix = np.asarray(prompt, np.int32)[:self.prefix_len]
+        return zlib.crc32(prefix.tobytes()) % self.replicas
+
+
+def make_router(policy: str, replicas: int, *,
+                prefix_len: int = 8) -> Router:
+    if policy == "round_robin":
+        return RoundRobin(replicas)
+    if policy == "least_loaded":
+        return LeastLoaded(replicas)
+    if policy == "prefix_affinity":
+        return PrefixAffinity(replicas, prefix_len=prefix_len)
+    raise ValueError(f"unknown routing policy {policy!r}; "
+                     f"choose from {ROUTING_POLICIES}")
+
+
+__all__ = ["ROUTING_POLICIES", "Router", "RoundRobin", "LeastLoaded",
+           "PrefixAffinity", "make_router"]

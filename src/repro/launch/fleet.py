@@ -1,0 +1,171 @@
+"""Fleet launcher: N ServeEngine replicas behind a routing policy.
+
+  python -m repro.launch.fleet --replicas 2 --routing least_loaded \\
+      --metrics-out fleet_metrics.json --timeline-out fleet_trace.json \\
+      --replay
+
+Serves a bursty open-loop smoke workload (one arrival stream, the shared
+fleet clock) through N replicas, then reports:
+
+  --metrics-out   the fleet metrics JSON: ``FleetMetrics`` summary (merged
+                  p50/p95/p99 TTFT/TPOT/queue-wait — lossless sample
+                  concatenation, so fleet percentiles are exact), load
+                  imbalance, and every node's full per-replica report
+  --timeline-out  ONE Perfetto trace.json with a process group per node
+                  (dispatch/fetch/slot lanes side by side) under a
+                  fleet-level queue-depth counter; with ``--replay``, each
+                  node's simulator NPU/PIM tracks join its group
+  --traces-out    directory for the per-node schema-v6 trace JSONL files
+                  (each passes ``repro.verify`` protocol lint on its own)
+
+The per-node timelines are coverage-checked before writing: each node's
+dispatch-slice count must equal its trace summary's dispatch total, the
+same contract ``launch.stats`` enforces for one engine.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+from repro.configs import get_arch
+from repro.fleet import ROUTING_POLICIES, FleetMetrics, serve_fleet
+from repro.launch.stats import check_coverage
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.obs import fleet_events, fleet_node_pids, write_chrome_trace
+from repro.serve import ServeConfig
+from repro.trace.arrivals import bursty_arrivals
+from repro.trace.lower import trace_to_commands
+from repro.trace.replay import TraceReplayer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="multi-replica fleet replay behind a routing policy")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--full", action="store_true",
+                    help="serve at full model dims (default: reduced smoke "
+                         "dims)")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--routing", default="least_loaded",
+                    choices=list(ROUTING_POLICIES))
+    ap.add_argument("--prefix-len", type=int, default=8,
+                    help="prompt-prefix tokens hashed by prefix_affinity")
+    # the bursty open-loop workload (one stream for the whole fleet)
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="mean arrivals per fleet tick")
+    ap.add_argument("--horizon", type=int, default=48,
+                    help="arrival horizon in fleet ticks")
+    ap.add_argument("--burst", type=int, default=8)
+    ap.add_argument("--idle", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=7)
+    # per-replica serve shape (dispatch_guard's smoke SERVE defaults)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--policy", default="interleaved",
+                    choices=["serial", "interleaved", "pim_aware"])
+    ap.add_argument("--superstep", type=int, default=4)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the fleet metrics JSON here")
+    ap.add_argument("--timeline-out", default=None,
+                    help="write the multi-node Perfetto trace.json here")
+    ap.add_argument("--traces-out", default=None,
+                    help="directory for per-node trace JSONL files")
+    ap.add_argument("--replay", action="store_true",
+                    help="replay each node's trace through the simulator "
+                         "for per-node + fleet NPU/PIM utilization")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_slots=args.slots, max_len=args.max_len,
+                       prefill_chunk=args.prefill_chunk, policy=args.policy,
+                       pack=True, fuse=True, superstep=args.superstep)
+    arrivals = bursty_arrivals(args.rate, args.horizon,
+                               vocab=cfg.vocab_size,
+                               burst=args.burst, idle=args.idle,
+                               prompt_len=(2, args.max_len - 24),
+                               max_new=(3, 10), seed=args.seed)
+    fleet = serve_fleet(cfg, params, scfg, arrivals,
+                        replicas=args.replicas, routing=args.routing,
+                        prefix_len=args.prefix_len)
+    print(f"[fleet] {args.replicas} replicas, routing={fleet.routing}: "
+          f"{len(arrivals)} arrivals, {fleet.served} served")
+
+    fm = FleetMetrics()
+    for node, hub in fleet.hubs.items():
+        fm.add(node, hub)
+
+    replays = None
+    if args.replay:
+        replays = {}
+        for node, trace in fleet.traces.items():
+            rep = TraceReplayer().replay(trace_to_commands(trace))
+            replays[node] = rep
+            fm.add_replay(node, rep)
+
+    problems = []
+    for node, trace in fleet.traces.items():
+        pid_engine, _slots, _sim = fleet_node_pids(node)
+        s = fleet.hubs[node].summary()
+        mix = s["dispatch_mix"]
+        line = (f"[fleet] node {node}: "
+                f"{s['requests']['arrived']} requests, "
+                f"{s['requests']['tokens_generated']} tokens, "
+                f"{mix['total']} dispatches, {mix['host_syncs']} syncs, "
+                f"ttft p50/p99 = {s['ttft_ticks']['p50']:.1f}/"
+                f"{s['ttft_ticks']['p99']:.1f} ticks")
+        if replays is not None:
+            r = replays[node]
+            line += (f", MU {r.result.group_utilization('MU'):.1%} / "
+                     f"PIM {r.result.group_utilization('PIM'):.1%}")
+        print(line)
+    events = fleet_events(fleet.traces,
+                          replays={n: r.result for n, r in replays.items()}
+                          if replays else None)
+    for node, trace in fleet.traces.items():
+        pid_engine, _slots, _sim = fleet_node_pids(node)
+        for p in check_coverage(trace, events, pid=pid_engine):
+            problems.append(f"node {node}: {p}")
+    for p in problems:
+        print(f"[fleet] COVERAGE FAIL: {p}")
+
+    fs = fm.summary()
+    print(f"[fleet] fleet ttft p50/p99 = {fs['ttft_ticks']['p50']:.1f}/"
+          f"{fs['ttft_ticks']['p99']:.1f} ticks, tpot p50/p99 = "
+          f"{fs['tpot_ticks']['p50']:.1f}/{fs['tpot_ticks']['p99']:.1f}; "
+          f"request share "
+          + "/".join(f"{fs['imbalance']['request_share'][n]:.2f}"
+                     for n in fs["imbalance"]["request_share"])
+          + f", queue-depth spread {fs['imbalance']['queue_depth_spread']:g}")
+    if fs["utilization"]:
+        u = fs["utilization"]["fleet"]
+        print(f"[fleet] fleet utilization: MU {u['mu']:.1%} / "
+              f"PIM {u['pim']:.1%}")
+
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(fm.to_dict(), f, indent=2)
+        print(f"[fleet] wrote fleet metrics -> {args.metrics_out}")
+    if args.timeline_out:
+        write_chrome_trace(args.timeline_out, events)
+        print(f"[fleet] wrote {len(events)} trace events -> "
+              f"{args.timeline_out} (load in https://ui.perfetto.dev)")
+    if args.traces_out:
+        os.makedirs(args.traces_out, exist_ok=True)
+        for node, trace in fleet.traces.items():
+            path = os.path.join(args.traces_out, f"node{node}.jsonl")
+            trace.save(path)
+            print(f"[fleet] wrote node {node} trace -> {path}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,5 @@
-"""Offline observability CLI: metrics report + Perfetto timeline for a
-recorded serving trace.
+"""Offline observability CLI: metrics report + Perfetto timeline for
+recorded serving traces.
 
   PYTHONPATH=src python -m repro.launch.stats benchmarks/data/smoke_trace.jsonl \\
       --out metrics.json --timeline trace.json --replay
@@ -25,16 +25,24 @@ The timeline is checked against the trace summary before it is written:
 dispatch-slice count must equal the engine's recorded dispatch total and
 resolve-slice count its host-sync total, so "covers every dispatch span"
 is enforced, not assumed.
+
+Several trace files (or a shell/``--glob``-expanded pattern) aggregate
+through ``repro.fleet.FleetMetrics`` — the SAME path the live fleet router
+reports through — into a fleet report: merged-exact p50/p99 TTFT/TPOT,
+load imbalance, per-node coverage-checked track groups in one timeline,
+and (with ``--replay``) per-node + fleet NPU/PIM utilization.
 """
 from __future__ import annotations
 
 import argparse
+import glob as globlib
 import json
 import sys
 from typing import List, Optional
 
-from repro.obs import MetricsHub, dispatch_slices, engine_events, sim_events, \
-    write_chrome_trace
+from repro.obs import (MetricsHub, dispatch_slices, engine_events,
+                       fleet_events, fleet_node_pids, sim_events,
+                       write_chrome_trace)
 from repro.trace.lower import trace_to_commands
 from repro.trace.replay import TraceReplayer
 from repro.trace.schema import Trace
@@ -44,18 +52,24 @@ def build_report(trace: Trace) -> MetricsHub:
     return MetricsHub().ingest(trace)
 
 
-def check_coverage(trace: Trace, events: List[dict]) -> List[str]:
-    """The timeline's coverage contract vs the trace's own summary."""
+def check_coverage(trace: Trace, events: List[dict],
+                   pid: Optional[int] = None) -> List[str]:
+    """The timeline's coverage contract vs the trace's own summary.
+    ``pid`` selects one node's engine track group in a fleet export (and
+    scopes the resolve-slice count to it); default is the single-engine
+    layout."""
     problems = []
     if trace.summary is not None:
         want = sum(trace.summary["dispatch_counts"].values())
-        got = len(dispatch_slices(events))
+        got = len(dispatch_slices(events) if pid is None
+                  else dispatch_slices(events, pid=pid))
         if got != want:
             problems.append(f"timeline has {got} dispatch slices; the "
                             f"trace summary counts {want} dispatches")
         want_syncs = trace.summary["host_syncs"]
         got_syncs = sum(1 for e in events if e["ph"] == "X"
-                        and e.get("cat") == "fetch")
+                        and e.get("cat") == "fetch"
+                        and (pid is None or e.get("pid") == pid))
         if got_syncs != want_syncs:
             problems.append(f"timeline has {got_syncs} resolve slices; the "
                             f"trace summary counts {want_syncs} host syncs")
@@ -83,12 +97,98 @@ def _print_summary(s: dict) -> None:
           f"syncs; valid-token fraction {s['valid_token_fraction']:.3f}")
 
 
+def _expand(patterns: List[str]) -> List[str]:
+    """Shell-unexpanded globs (quoted, or from CI YAML) expand here; plain
+    paths pass through."""
+    paths: List[str] = []
+    for p in patterns:
+        hits = sorted(globlib.glob(p))
+        paths += hits if hits else [p]
+    return paths
+
+
+def _fleet_report(paths: List[str], args) -> int:
+    """Several traces = one fleet: aggregate through ``FleetMetrics`` and
+    emit one multi-node timeline (per-node coverage enforced)."""
+    from repro.fleet import FleetMetrics
+
+    loaded = [Trace.load(p) for p in paths]
+    node_ids = [int(tr.header.get("node_id", 0)) for tr in loaded]
+    if len(set(node_ids)) != len(node_ids):
+        # standalone traces (all node 0) or mixed sets: position in the
+        # argument list becomes the node id
+        node_ids = list(range(len(loaded)))
+    traces = dict(zip(node_ids, loaded))
+    fm = FleetMetrics.from_traces(traces)
+
+    replays = None
+    if args.replay:
+        cfg = None
+        if args.arch:
+            from repro.configs import get_arch
+            cfg = get_arch(args.arch)
+        replays = {}
+        for node, tr in traces.items():
+            rep = TraceReplayer().replay(trace_to_commands(tr, cfg=cfg))
+            replays[node] = rep
+            fm.add_replay(node, rep)
+
+    s = fm.summary()
+    print(f"[stats] fleet of {s['replicas']}: "
+          f"{s['requests']['arrived']} arrived, "
+          f"{s['requests']['completed']} completed, "
+          f"{s['requests']['tokens_generated']} tokens")
+    for name in ("ttft_ticks", "tpot_ticks", "queue_wait_ticks"):
+        h = s[name]
+        print(f"[stats] {name:>16}: n={h['count']:>4} mean={h['mean']:.2f} "
+              f"p50={h['p50']:.1f} p95={h['p95']:.1f} p99={h['p99']:.1f} "
+              f"max={h['max']:.0f}")
+    share = s["imbalance"]["request_share"]
+    print(f"[stats] request share: "
+          + "  ".join(f"node{n}={share[n]:.2f}" for n in sorted(share))
+          + f"; queue-depth spread {s['imbalance']['queue_depth_spread']:g}")
+    if s["utilization"]:
+        u = s["utilization"]
+        print("[stats] utilization: "
+              + "  ".join(f"node{n}: MU {v['mu']:.1%}/PIM {v['pim']:.1%}"
+                          for n, v in sorted(u["per_node"].items()))
+              + f"; fleet MU {u['fleet']['mu']:.1%}/"
+                f"PIM {u['fleet']['pim']:.1%}")
+
+    events = fleet_events(traces,
+                          replays={n: r.result for n, r in replays.items()}
+                          if replays else None)
+    problems = []
+    for node, tr in traces.items():
+        pid_engine, _pid_slots, _pid_sim = fleet_node_pids(node)
+        problems += [f"node {node}: {p}"
+                     for p in check_coverage(tr, events, pid=pid_engine)]
+    for p in problems:
+        print(f"[stats] COVERAGE FAIL: {p}")
+
+    if args.out:
+        report = fm.to_dict()
+        if replays:
+            report["replay"] = {n: r.to_dict() for n, r in replays.items()}
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"[stats] wrote fleet metrics report -> {args.out}")
+    if args.timeline:
+        write_chrome_trace(args.timeline, events)
+        print(f"[stats] wrote {len(events)} trace events -> {args.timeline} "
+              f"(load in https://ui.perfetto.dev)")
+    return 1 if problems else 0
+
+
 def main(argv: Optional[list] = None) -> int:
     ap = argparse.ArgumentParser(
-        description="metrics report + Perfetto timeline for a recorded "
-                    "serving trace")
-    ap.add_argument("trace", help="workload trace JSONL "
-                                  "(e.g. benchmarks/data/smoke_trace.jsonl)")
+        description="metrics report + Perfetto timeline for recorded "
+                    "serving traces (several = a fleet)")
+    ap.add_argument("trace", nargs="+",
+                    help="workload trace JSONL path(s) or glob(s) "
+                         "(e.g. benchmarks/data/smoke_trace.jsonl, "
+                         "'out/node*.jsonl'); several files aggregate as "
+                         "one fleet")
     ap.add_argument("--out", default=None,
                     help="write the metrics report JSON here")
     ap.add_argument("--timeline", default=None,
@@ -101,7 +201,11 @@ def main(argv: Optional[list] = None) -> int:
                          "instead of the dims recorded in the header")
     args = ap.parse_args(argv)
 
-    trace = Trace.load(args.trace)
+    paths = _expand(args.trace)
+    if len(paths) > 1:
+        return _fleet_report(paths, args)
+
+    trace = Trace.load(paths[0])
     hub = build_report(trace)
     summary = hub.summary()
     _print_summary(summary)

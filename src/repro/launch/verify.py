@@ -7,10 +7,11 @@ Three passes per ``*.jsonl`` trace under ``--traces`` (none execute device
 code): the serving-protocol lint (``verify.protocol``), the per-dispatch-
 span hazard analysis over the lowered command DAGs (``verify.hazards``),
 and the reference-DAG diff of every lowered step. Plus one AST pass over
-``<src>/serve``, ``<src>/sched`` and ``<src>/obs`` for host-sync calls
-outside the allowlist (default: ``<src>/verify/sync_allowlist.txt`` when
-present) — observability rides the recorder's event stream and must stay
-sync-free by construction.
+``<src>/serve``, ``<src>/sched``, ``<src>/obs`` and ``<src>/fleet`` for
+host-sync calls outside the allowlist (default:
+``<src>/verify/sync_allowlist.txt`` when present) — observability and
+fleet routing both ride the recorder's event stream / host bookkeeping
+and must stay sync-free by construction.
 
 Exit status 1 when any error-severity finding survives; ``--out`` dumps
 the full finding list as JSON (the format ``benchmarks/hazard_guard.py``
@@ -85,7 +86,8 @@ def main(argv=None) -> int:
         allowlist = load_allowlist(allow_path)
     lint_dirs = [d for d in (os.path.join(args.src, "serve"),
                              os.path.join(args.src, "sched"),
-                             os.path.join(args.src, "obs"))
+                             os.path.join(args.src, "obs"),
+                             os.path.join(args.src, "fleet"))
                  if os.path.isdir(d)]
     sync = lint_host_syncs(lint_dirs, allowlist, root=args.src)
     for f in sync:

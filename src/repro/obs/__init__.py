@@ -27,13 +27,15 @@ baseline in CI.
 """
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsHub,
                                PERCENTILES, RequestLifecycle)
-from repro.obs.timeline import (PID_ENGINE, PID_SIM, PID_SLOTS, TICK_US,
-                                dispatch_slices, engine_events, sim_events,
-                                write_chrome_trace)
+from repro.obs.timeline import (NODE_PID_STRIDE, PID_ENGINE, PID_FLEET,
+                                PID_SIM, PID_SLOTS, TICK_US, dispatch_slices,
+                                engine_events, fleet_events, fleet_node_pids,
+                                sim_events, write_chrome_trace)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsHub", "PERCENTILES",
     "RequestLifecycle",
-    "PID_ENGINE", "PID_SIM", "PID_SLOTS", "TICK_US", "dispatch_slices",
-    "engine_events", "sim_events", "write_chrome_trace",
+    "NODE_PID_STRIDE", "PID_ENGINE", "PID_FLEET", "PID_SIM", "PID_SLOTS",
+    "TICK_US", "dispatch_slices", "engine_events", "fleet_events",
+    "fleet_node_pids", "sim_events", "write_chrome_trace",
 ]

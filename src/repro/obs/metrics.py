@@ -64,8 +64,23 @@ class Counter:
     def inc(self, n: int = 1) -> None:
         self.value += n
 
+    def merge(self, other: "Counter") -> "Counter":
+        """Fleet aggregation: counts add."""
+        self.value += other.value
+        return self
+
     def to_dict(self) -> dict:
         return {"type": "counter", "value": self.value}
+
+    def state_dict(self) -> dict:
+        """Lossless export (``from_state`` round-trips exactly)."""
+        return {"type": "counter", "name": self.name, "value": self.value}
+
+    @classmethod
+    def from_state(cls, d: dict) -> "Counter":
+        c = cls(d["name"])
+        c.value = d["value"]
+        return c
 
 
 class Gauge:
@@ -99,10 +114,49 @@ class Gauge:
             total += t1 - t0
         return acc / total if total else self.value
 
+    def merge(self, other: "Gauge") -> "Gauge":
+        """Fleet aggregation by TICK INTERVAL: the merged series is the SUM
+        of the two step functions over the union of their change ticks
+        (each series reads 0 before its first sample). This is the correct
+        semantics for per-replica queue depth / slot occupancy sharing one
+        fleet clock — naive sample averaging would weight each replica's
+        values by how often they *changed*, not how long they *held*."""
+        if not other.series:
+            return self
+        if not self.series:
+            self.series = [(t, v) for t, v in other.series]
+            return self
+        a, b = self.series, other.series
+        ia = ib = 0
+        va = vb = 0.0
+        merged: List[tuple] = []
+        for t in sorted({t for t, _ in a} | {t for t, _ in b}):
+            while ia < len(a) and a[ia][0] <= t:
+                va = a[ia][1]
+                ia += 1
+            while ib < len(b) and b[ib][0] <= t:
+                vb = b[ib][1]
+                ib += 1
+            merged.append((t, va + vb))
+        self.series = merged
+        return self
+
     def to_dict(self) -> dict:
         return {"type": "gauge", "last": self.value, "max": self.max(),
                 "mean": self.time_weighted_mean(),
                 "samples": len(self.series)}
+
+    def state_dict(self) -> dict:
+        """Lossless export: the full stepped series, so a reloaded gauge
+        merges and summarizes identically to the original."""
+        return {"type": "gauge", "name": self.name,
+                "series": [[t, v] for t, v in self.series]}
+
+    @classmethod
+    def from_state(cls, d: dict) -> "Gauge":
+        g = cls(d["name"])
+        g.series = [(t, v) for t, v in d["series"]]
+        return g
 
 
 class Histogram:
@@ -136,8 +190,26 @@ class Histogram:
             out[f"p{q:g}"] = float(np.percentile(a, q))
         return out
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fleet aggregation is LOSSLESS: samples concatenate, so percentiles
+        of a merged histogram are exactly ``np.percentile`` over the
+        concatenated raw samples (no bucketing error to compound)."""
+        self.samples.extend(other.samples)
+        return self
+
     def to_dict(self) -> dict:
         return {"type": "histogram", **self.summary()}
+
+    def state_dict(self) -> dict:
+        """Lossless export: raw samples, not a summary."""
+        return {"type": "histogram", "name": self.name,
+                "samples": list(self.samples)}
+
+    @classmethod
+    def from_state(cls, d: dict) -> "Histogram":
+        h = cls(d["name"])
+        h.samples = [float(s) for s in d["samples"]]
+        return h
 
 
 @dataclass
@@ -199,6 +271,17 @@ class MetricsHub:
 
     def counter(self, name: str) -> Counter:
         return self._get(Counter, name)
+
+    def merge(self, other: "MetricsHub") -> "MetricsHub":
+        """Merge another hub's metric REGISTRY into this one: counters add,
+        histograms concatenate samples (percentiles stay exact), gauges sum
+        as step functions over the fleet clock. Request lifecycles, header
+        and engine summary are NOT merged — rids are per-engine, so
+        ``repro.fleet.FleetMetrics`` keeps per-node hubs for request-level
+        data and uses this only for the fleet-wide registry rollup."""
+        for name, m in other._metrics.items():
+            self._get(type(m), name).merge(m)
+        return self
 
     def gauge(self, name: str) -> Gauge:
         return self._get(Gauge, name)

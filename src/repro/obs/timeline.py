@@ -46,10 +46,22 @@ PID_ENGINE = 1
 PID_SLOTS = 2
 PID_SIM = 3
 
+# fleet export (``fleet_events``): one process GROUP per node, pids strided
+# so Perfetto sorts node 0's engine/slots/sim tracks together, node 1's
+# next, ... with the fleet-level counter process on top
+PID_FLEET = 9
+NODE_PID_STRIDE = 10
+
 _TID_PREFILL = 1
 _TID_DECODE = 2
 _TID_FUSED = 3
 _TID_FETCH = 4
+
+
+def fleet_node_pids(node: int) -> tuple:
+    """(engine, slots, sim) pids for one fleet node's track group."""
+    base = NODE_PID_STRIDE * (int(node) + 1)
+    return base, base + 1, base + 2
 
 
 def _meta(pid: int, name: str, tid: Optional[int] = None,
@@ -93,15 +105,20 @@ class _TickLayout:
         return step * TICK_US + i * width, width
 
 
-def engine_events(trace) -> List[dict]:
-    """Trace-event list for one recorded serving trace."""
+def engine_events(trace, *, pid_engine: int = PID_ENGINE,
+                  pid_slots: int = PID_SLOTS,
+                  label: str = "serving engine",
+                  slots_label: str = "slots") -> List[dict]:
+    """Trace-event list for one recorded serving trace. ``pid_engine`` /
+    ``pid_slots`` relocate the track group so ``fleet_events`` can lay N
+    replicas' timelines side by side in one trace.json."""
     events: List[dict] = []
-    events += _meta(PID_ENGINE, "serving engine", _TID_PREFILL, "NPU prefill")
-    events += _meta(PID_ENGINE, "serving engine", _TID_DECODE, "PIM decode")
-    events += _meta(PID_ENGINE, "serving engine", _TID_FUSED,
+    events += _meta(pid_engine, label, _TID_PREFILL, "NPU prefill")
+    events += _meta(pid_engine, label, _TID_DECODE, "PIM decode")
+    events += _meta(pid_engine, label, _TID_FUSED,
                     "fused step (NPU+PIM)")
-    events += _meta(PID_ENGINE, "serving engine", _TID_FETCH, "host fetch")
-    events += _meta(PID_SLOTS, "slots")
+    events += _meta(pid_engine, label, _TID_FETCH, "host fetch")
+    events += _meta(pid_slots, slots_label)
 
     # pass 1: count dispatch slices per (step, track) so co-issued work
     # subdivides its tick; fused pairs place ONE slice, superstep rounds
@@ -141,26 +158,27 @@ def engine_events(trace) -> List[dict]:
             k = int(rounds[0].get("superstep", len(rounds)))
             end = (int(rounds[-1]["step"]) + 1) * TICK_US
             events.append(_slice(
-                f"superstep x{k}", ts, end - ts, tid,
+                f"superstep x{k}", ts, end - ts, tid, pid=pid_engine,
                 args={"step": step, "k": k, "rounds": len(rounds),
                       "superstep_id": int(rounds[0]["superstep_id"])}))
             for r in rounds:
                 rts = int(r["step"]) * TICK_US
                 events.append(_slice(
                     "decode round", max(rts, ts), TICK_US - max(ts - rts, 0),
-                    tid, cat="round",
+                    tid, pid=pid_engine, cat="round",
                     args={"step": int(r["step"]),
                           "occupancy": int(r["occupancy"]),
                           "tokens": len(r["tokens"])}))
             flow_id += 1
             events += _fetch(flow_id, ts, end, tid,
-                             {"kind": "superstep", "rounds": len(rounds)})
+                             {"kind": "superstep", "rounds": len(rounds)},
+                             pid=pid_engine)
             continue
         ts, width = layouts[tid].window(step, i)
         if ev["type"] == "prefill":
             name = "prefill (packed)" if ev.get("packed") else "prefill"
             events.append(_slice(
-                name, ts, width, tid,
+                name, ts, width, tid, pid=pid_engine,
                 args={"step": step, "offset": int(ev["offset"]),
                       "chunk": int(ev["chunk"]), "valid": int(ev["valid"]),
                       "kv": int(ev["kv"]), "rows": int(ev.get("rows", 0)),
@@ -175,33 +193,39 @@ def engine_events(trace) -> List[dict]:
         else:
             name, kind = "decode", "decode"
         events.append(_slice(
-            name, ts, width, tid,
+            name, ts, width, tid, pid=pid_engine,
             args={"step": step, "occupancy": int(ev["occupancy"]),
                   "tokens": len(ev["tokens"]),
                   "overlap": bool(ev.get("overlap", False))}))
         flow_id += 1
-        events += _fetch(flow_id, ts, ts + width, tid, {"kind": kind})
+        events += _fetch(flow_id, ts, ts + width, tid, {"kind": kind},
+                         pid=pid_engine)
 
-    events += _lifecycle_events(trace)
+    events += _lifecycle_events(trace, pid_engine=pid_engine,
+                                pid_slots=pid_slots, slots_label=slots_label)
     return events
 
 
 def _fetch(flow_id: int, dispatch_ts: float, resolve_end: float,
-           dispatch_tid: int, args: dict) -> List[dict]:
+           dispatch_tid: int, args: dict,
+           pid: int = PID_ENGINE) -> List[dict]:
     """The async-fetch flow: a flow arrow from the dispatch slice to the
     blocking resolve slice on the host-fetch track (one per host sync)."""
     rdur = TICK_US / 8
     rts = resolve_end - rdur
     return [
         {"ph": "s", "name": "fetch", "cat": "fetch", "id": flow_id,
-         "pid": PID_ENGINE, "tid": dispatch_tid, "ts": dispatch_ts},
-        _slice("resolve", rts, rdur, _TID_FETCH, cat="fetch", args=args),
+         "pid": pid, "tid": dispatch_tid, "ts": dispatch_ts},
+        _slice("resolve", rts, rdur, _TID_FETCH, pid=pid, cat="fetch",
+               args=args),
         {"ph": "f", "name": "fetch", "cat": "fetch", "id": flow_id,
-         "bp": "e", "pid": PID_ENGINE, "tid": _TID_FETCH, "ts": rts},
+         "bp": "e", "pid": pid, "tid": _TID_FETCH, "ts": rts},
     ]
 
 
-def _lifecycle_events(trace) -> List[dict]:
+def _lifecycle_events(trace, *, pid_engine: int = PID_ENGINE,
+                      pid_slots: int = PID_SLOTS,
+                      slots_label: str = "slots") -> List[dict]:
     """Per-slot residency slices + queue/occupancy counter tracks."""
     events: List[dict] = []
     admit_step: Dict[int, tuple] = {}     # rid -> (slot, step, plen)
@@ -210,10 +234,10 @@ def _lifecycle_events(trace) -> List[dict]:
     horizon = 0
 
     def counters(step: int) -> None:
-        events.append({"ph": "C", "name": "queue_depth", "pid": PID_ENGINE,
+        events.append({"ph": "C", "name": "queue_depth", "pid": pid_engine,
                        "tid": 0, "ts": step * TICK_US,
                        "args": {"queued": queue_depth}})
-        events.append({"ph": "C", "name": "slots_busy", "pid": PID_ENGINE,
+        events.append({"ph": "C", "name": "slots_busy", "pid": pid_engine,
                        "tid": 0, "ts": step * TICK_US,
                        "args": {"busy": slots_busy}})
 
@@ -239,7 +263,7 @@ def _lifecycle_events(trace) -> List[dict]:
                 slot, s0, plen = admit_step.pop(rid)
                 events.append(_slice(
                     f"rid {rid}", s0 * TICK_US, (step + 1 - s0) * TICK_US,
-                    slot, pid=PID_SLOTS, cat="request",
+                    slot, pid=pid_slots, cat="request",
                     args={"rid": rid, "prompt_len": plen,
                           "queue_wait": s0 - arrival.get(rid, s0),
                           "reason": ev["reason"],
@@ -248,11 +272,11 @@ def _lifecycle_events(trace) -> List[dict]:
     for rid, (slot, s0, plen) in admit_step.items():
         events.append(_slice(
             f"rid {rid}", s0 * TICK_US, (horizon + 1 - s0) * TICK_US, slot,
-            pid=PID_SLOTS, cat="request",
+            pid=pid_slots, cat="request",
             args={"rid": rid, "prompt_len": plen, "reason": "open"}))
     for slot in sorted({e["tid"] for e in events
-                        if e.get("pid") == PID_SLOTS and e["ph"] == "X"}):
-        events += _meta(PID_SLOTS, "slots", slot, f"slot {slot}")
+                        if e.get("pid") == pid_slots and e["ph"] == "X"}):
+        events += _meta(pid_slots, slots_label, slot, f"slot {slot}")
     return events
 
 
@@ -277,11 +301,58 @@ def sim_events(result, *, scale: float = 1e6,
     return events
 
 
-def dispatch_slices(events: List[dict]) -> List[dict]:
+def dispatch_slices(events: List[dict], pid: int = PID_ENGINE) -> List[dict]:
     """The slices standing for host dispatches (the coverage contract:
-    exactly one per dispatch the trace summary counts)."""
+    exactly one per dispatch the trace summary counts). ``pid`` selects
+    which node's engine track to count in a fleet export."""
     return [e for e in events if e["ph"] == "X" and e.get("cat") == "dispatch"
-            and e.get("pid") == PID_ENGINE]
+            and e.get("pid") == pid]
+
+
+def fleet_events(traces: Dict[int, object],
+                 replays: Optional[Dict[int, object]] = None) -> List[dict]:
+    """One trace.json for a whole fleet: a process group per node (engine
+    dispatch/fetch lanes, slot lanes, and — when ``replays`` carries that
+    node's ``SimResult`` — its simulator tracks), topped by a fleet-level
+    queue-depth counter summed over all replicas. Idle replicas show up as
+    empty tracks next to busy ones — routing pathologies at a glance.
+
+    ``traces`` maps node_id -> ``trace.Trace``; every node shares the fleet
+    global tick, so slices line up across track groups without shifting."""
+    from repro.obs.metrics import Gauge
+
+    events: List[dict] = []
+    events += _meta(PID_FLEET, "fleet")
+    fleet_queue = Gauge("fleet_queue_depth")
+    for node in sorted(traces):
+        trace = traces[node]
+        pid_engine, pid_slots, pid_sim = fleet_node_pids(node)
+        events += engine_events(trace, pid_engine=pid_engine,
+                                pid_slots=pid_slots,
+                                label=f"node {node} · serving engine",
+                                slots_label=f"node {node} · slots")
+        if replays and node in replays and replays[node] is not None:
+            events += sim_events(replays[node], pid=pid_sim,
+                                 name=f"node {node} · simulator")
+        # per-node queue-depth step function off the same lifecycle events
+        # the per-node counter tracks render; merging sums over the fleet
+        # clock (exactly Gauge.merge semantics)
+        g = Gauge(f"node{node}")
+        depth = 0
+        for ev in trace.events:
+            if ev["type"] == "request":
+                depth += 1
+            elif ev["type"] == "admit":
+                depth -= len(ev["wave"])
+            else:
+                continue
+            g.set(int(ev["step"]), depth)
+        fleet_queue.merge(g)
+    for t, v in fleet_queue.series:
+        events.append({"ph": "C", "name": "fleet_queue_depth",
+                       "pid": PID_FLEET, "tid": 0, "ts": t * TICK_US,
+                       "args": {"queued": v}})
+    return events
 
 
 def write_chrome_trace(path, events: List[dict]) -> None:
@@ -290,5 +361,7 @@ def write_chrome_trace(path, events: List[dict]) -> None:
         json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
 
 
-__all__ = ["TICK_US", "PID_ENGINE", "PID_SLOTS", "PID_SIM", "engine_events",
-           "sim_events", "dispatch_slices", "write_chrome_trace"]
+__all__ = ["TICK_US", "PID_ENGINE", "PID_SLOTS", "PID_SIM", "PID_FLEET",
+           "NODE_PID_STRIDE", "fleet_node_pids", "engine_events",
+           "sim_events", "fleet_events", "dispatch_slices",
+           "write_chrome_trace"]

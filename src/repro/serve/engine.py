@@ -312,6 +312,15 @@ class ServeEngine:
                                      max_new_tokens, arrival_offset=offset)
         return rid
 
+    def load_stats(self) -> Dict[str, int]:
+        """Router hook (``repro.fleet``): the engine's instantaneous load,
+        from host state only — queue depth plus slot occupancy is what a
+        least-loaded balancer steers on."""
+        busy = sum(r is not None for r in self.slot_req)
+        return {"queued": len(self.queue), "busy": busy,
+                "ready": sum(self.slot_ready),
+                "free": self.scfg.max_slots - busy}
+
     def free_slot_ids(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 

@@ -20,11 +20,17 @@ from repro.trace.schema import SCHEMA_VERSION, Trace
 
 
 class TraceRecorder:
-    def __init__(self, sinks: Iterable = ()):
+    def __init__(self, sinks: Iterable = (), node_id: int = 0,
+                 fleet: Optional[dict] = None):
+        # node_id / fleet (schema v6): which replica this recorder serves
+        # and the fleet shape it serves in ({"replicas": N, "routing": P});
+        # a standalone serve is node 0 of no fleet
         self._engine = None
         self._header: Optional[dict] = None
         self.events: List[dict] = []
         self.sinks = list(sinks)
+        self.node_id = int(node_id)
+        self.fleet = dict(fleet) if fleet is not None else None
 
     def _emit(self, ev: dict) -> None:
         self.events.append(ev)
@@ -39,6 +45,7 @@ class TraceRecorder:
         cfg, scfg = engine.cfg, engine.scfg
         self._header = {
             "type": "header", "version": SCHEMA_VERSION,
+            "node_id": self.node_id, "fleet": self.fleet,
             "arch": cfg.name, "family": cfg.family,
             "model": {
                 "num_layers": cfg.num_layers, "d_model": cfg.d_model,

@@ -73,6 +73,16 @@ Version history:
        superstep / serialized / ...). Loading a v1-v4 trace upgrades in
        place: arrival_offset=0 (arrival == injection, the pre-v5
        semantics).
+  v6 — fleet serving (repro.fleet): the header gains top-level ``node_id``
+       (which replica of a fleet recorded this trace; every event in one
+       file belongs to one node — a fleet serve writes one trace PER
+       replica, each protocol-lintable on its own) and ``fleet`` (either
+       null for a standalone serve or {"replicas": N, "routing": policy}
+       describing the fleet the node served in). Per-node engine clocks
+       share the fleet driver's global tick, so gauges/timelines from
+       different nodes of one serve merge on a common timebase. Loading a
+       v1-v5 trace upgrades in place: node_id=0, fleet=None (a single-node
+       serve is a one-replica fleet).
 """
 from __future__ import annotations
 
@@ -82,8 +92,8 @@ from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 
-SCHEMA_VERSION = 5
-SUPPORTED_VERSIONS = (1, 2, 3, 4, 5)
+SCHEMA_VERSION = 6
+SUPPORTED_VERSIONS = (1, 2, 3, 4, 5, 6)
 
 # required keys per event type (beyond "type")
 _REQUIRED: Dict[str, tuple] = {
@@ -111,6 +121,11 @@ _REQUIRED_V4: Dict[str, tuple] = {
 # additional keys required from v5 on
 _REQUIRED_V5: Dict[str, tuple] = {
     "request": ("arrival_offset",),
+}
+# additional keys required from v6 on (header only: which fleet node
+# recorded the trace, and the fleet shape it served in — null standalone)
+_REQUIRED_V6: Dict[str, tuple] = {
+    "header": ("node_id", "fleet"),
 }
 _MODEL_KEYS = ("num_layers", "d_model", "num_heads", "num_kv_heads",
                "head_dim", "d_ff", "vocab_size")
@@ -143,6 +158,8 @@ def validate_event(ev: dict, version: int = SCHEMA_VERSION) -> dict:
         required = required + _REQUIRED_V4.get(t, ())
     if version >= 5:
         required = required + _REQUIRED_V5.get(t, ())
+    if version >= 6:
+        required = required + _REQUIRED_V6.get(t, ())
     missing = [k for k in required if k not in ev]
     if missing:
         raise TraceSchemaError(f"{t} event missing keys {missing}: {ev!r}")
@@ -206,6 +223,11 @@ def upgrade_event(ev: dict, version: int) -> dict:
         # (no superstep-span sub-step offsets were tracked)
         if ev["type"] == "request":
             ev.setdefault("arrival_offset", 0)
+    if version < 6:
+        # pre-fleet semantics: every trace is node 0 of a standalone serve
+        if ev["type"] == "header":
+            ev.setdefault("node_id", 0)
+            ev.setdefault("fleet", None)
     return ev
 
 

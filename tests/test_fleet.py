@@ -1,0 +1,435 @@
+"""Fleet observability: routing invariants, lossless metric merging,
+schema v6, multi-node timelines, and the fleet CLIs."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.fleet import (ROUTING_POLICIES, FleetMetrics, LeastLoaded,
+                         make_router, serve_fleet)
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.obs import (Counter, Gauge, Histogram, MetricsHub, fleet_events,
+                       fleet_node_pids)
+from repro.serve import ServeConfig, ServeEngine
+from repro.trace import TraceRecorder, drive
+from repro.trace.arrivals import ArrivalEvent, bursty_arrivals
+from repro.trace.schema import (SCHEMA_VERSION, Trace, TraceSchemaError,
+                                upgrade_event, validate_event)
+from repro.verify import lint_trace
+
+KEY = jax.random.PRNGKey(0)
+FULL_DIMS = (2048, 8192)
+REPLICAS = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_params(T.param_defs(cfg), KEY)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def arrivals(setup):
+    cfg, _ = setup
+    return bursty_arrivals(1.0, 24, vocab=cfg.vocab_size, burst=6, idle=6,
+                           prompt_len=(2, 40), max_new=(3, 8), seed=3)
+
+
+def _scfg(**kw):
+    base = dict(max_slots=4, max_len=64, prefill_chunk=8,
+                policy="interleaved", pack=True, fuse=True, superstep=4,
+                map_dims=FULL_DIMS)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def fleets(setup, arrivals):
+    """One fleet serve per routing policy, same arrival stream."""
+    cfg, params = setup
+    return {p: serve_fleet(cfg, params, _scfg(), arrivals,
+                           replicas=REPLICAS, routing=p)
+            for p in ROUTING_POLICIES}
+
+
+# --------------------------------------------------------------------------- #
+# metric primitives: lossless merge + dict round-trip
+# --------------------------------------------------------------------------- #
+def test_counter_merge_and_roundtrip():
+    a, b = Counter("c"), Counter("c")
+    a.inc(3)
+    b.inc(4)
+    assert Counter.from_state(a.state_dict()).value == 3
+    a.merge(b)
+    assert a.value == 7
+
+
+def test_histogram_merge_is_concatenation():
+    """Merged-histogram percentiles == np.percentile over the concatenated
+    raw samples — the numpy-pinned lossless-merge contract."""
+    rng = np.random.default_rng(0)
+    xs, ys = rng.normal(10, 3, 37).tolist(), rng.gamma(2, 5, 23).tolist()
+    a, b = Histogram("h"), Histogram("h")
+    for x in xs:
+        a.observe(x)
+    for y in ys:
+        b.observe(y)
+    a.merge(b)
+    both = np.asarray(xs + ys)
+    for q in (50.0, 95.0, 99.0):
+        assert a.percentile(q) == float(np.percentile(both, q))
+    assert a.count == len(xs) + len(ys)
+
+
+def test_histogram_roundtrip():
+    h = Histogram("h")
+    for x in (1.0, 5.0, 2.5):
+        h.observe(x)
+    h2 = Histogram.from_state(h.state_dict())
+    assert h2.samples == h.samples
+    assert h2.summary() == h.summary()
+
+
+def test_gauge_merge_by_tick_interval():
+    """Merged gauges SUM as step functions over the union of change ticks
+    — time-weighted means add; naive sample averaging would not."""
+    a, b = Gauge("g"), Gauge("g")
+    # a: 2 on [0,10); b: 4 on [4,6), 0 after
+    a.set(0, 2.0)
+    a.set(10, 0.0)
+    b.set(4, 4.0)
+    b.set(6, 0.0)
+    a.merge(b)
+    assert a.series == [(0, 2.0), (4, 6.0), (6, 2.0), (10, 0.0)]
+    # time-weighted mean over [0,10): (2*4 + 6*2 + 2*4) / 10
+    assert a.time_weighted_mean() == pytest.approx(2.8)
+    # naive sample averaging of the two gauges' values would have claimed
+    # mean((2,0)) + mean-ish contributions nowhere near the held-time sum
+    assert a.max() == 6.0
+
+
+def test_gauge_merge_identity_and_roundtrip():
+    g = Gauge("g")
+    g.set(1, 3.0)
+    g.set(5, 1.0)
+    empty = Gauge("g")
+    empty.merge(g)
+    assert empty.series == g.series
+    g2 = Gauge.from_state(g.state_dict())
+    assert g2.series == g.series
+    assert g2.time_weighted_mean() == g.time_weighted_mean()
+
+
+def test_hub_merge_registry(fleets):
+    """MetricsHub.merge: counters add and histogram percentiles equal
+    percentiles over both hubs' concatenated raw samples."""
+    hubs = fleets["least_loaded"].hubs
+    merged = MetricsHub()
+    for hub in hubs.values():
+        merged.merge(hub)
+    raw = np.asarray(sum((hubs[n].histogram("ttft_ticks").samples
+                          for n in hubs), []))
+    for q in (50.0, 99.0):
+        assert merged.histogram("ttft_ticks").percentile(q) \
+            == float(np.percentile(raw, q))
+    assert merged.counter("requests_arrived").value \
+        == sum(h.counter("requests_arrived").value for h in hubs.values())
+
+
+# --------------------------------------------------------------------------- #
+# routing invariants
+# --------------------------------------------------------------------------- #
+def test_every_request_served_exactly_once(fleets, arrivals):
+    for policy, fleet in fleets.items():
+        gids = [g for g, _n, _r in fleet.assignments]
+        assert sorted(gids) == list(range(len(arrivals))), policy
+        assert fleet.served == len(arrivals), policy
+
+
+def test_tokens_invariant_across_policies(fleets):
+    """Greedy tokens depend only on the request, never on which replica
+    served it or how it was routed."""
+    by_policy = {p: f.tokens_by_gid() for p, f in fleets.items()}
+    ref = by_policy["round_robin"]
+    assert all(len(v) > 0 for v in ref.values())
+    for policy, toks in by_policy.items():
+        assert toks == ref, policy
+
+
+def test_least_loaded_deterministic_under_ties(setup, arrivals):
+    """Same stream, same engines twice -> identical assignment, even though
+    an idle fleet ties every replica at load 0."""
+    cfg, params = setup
+    a = serve_fleet(cfg, params, _scfg(), arrivals, replicas=REPLICAS,
+                    routing="least_loaded")
+    b = serve_fleet(cfg, params, _scfg(), arrivals, replicas=REPLICAS,
+                    routing="least_loaded")
+    assert a.assignments == b.assignments
+    assert a.results == b.results
+    # the tie itself is exercised: a fresh idle fleet routes by routed-count
+    # then node id, deterministically
+    router = make_router("least_loaded", 3)
+    idle = [ServeEngine(cfg, params, _scfg()) for _ in range(3)]
+    first = router.route(np.array([1, 2], np.int32), idle)
+    assert first == 0
+    assert isinstance(router, LeastLoaded)
+
+
+def test_dispatch_parity_with_single_node(setup, arrivals, fleets):
+    """The tentpole invariant: a replica serving its routed subset inside
+    the fleet issues EXACTLY the dispatches, host syncs and tokens of a
+    single engine serving that subset alone under ``drive`` — the fleet
+    adds routing, never work."""
+    cfg, params = setup
+    fleet = fleets["least_loaded"]
+    for node in range(REPLICAS):
+        subset = [arrivals[g] for g, n, _r in fleet.assignments if n == node]
+        assert subset, "routing starved a replica"
+        solo = ServeEngine(cfg, params, _scfg())
+        solo_results = drive(solo, subset)
+        fleet_eng = fleet.engines[node]
+        assert fleet_eng.dispatch_counts == solo.dispatch_counts
+        assert fleet_eng.host_syncs == solo.host_syncs
+        assert fleet.results[node] == solo_results
+
+
+def test_prefix_affinity_is_content_hash(setup):
+    """Same prefix -> same node, regardless of arrival order or suffix."""
+    cfg, params = setup
+    router = make_router("prefix_affinity", 4, prefix_len=4)
+    base = np.arange(10, dtype=np.int32)
+    other = np.concatenate([base[:4], np.full(6, 99, np.int32)])
+    n1 = router.route(base, [])
+    assert router.route(other, []) == n1
+    assert router.route(base[:4], []) == n1
+    distinct = {router.route(np.full(4, v, np.int32), [])
+                for v in range(32)}
+    assert len(distinct) > 1          # it actually spreads load
+
+
+# --------------------------------------------------------------------------- #
+# fleet metrics: merged-exact percentiles, imbalance, utilization
+# --------------------------------------------------------------------------- #
+def test_fleet_percentiles_exact_over_raw_lifecycles(fleets):
+    """The acceptance bar: fleet p50/p99 TTFT/TPOT from FleetMetrics ==
+    np.percentile over ALL replicas' raw per-request samples."""
+    fleet = fleets["least_loaded"]
+    fm = FleetMetrics()
+    for node, hub in fleet.hubs.items():
+        fm.add(node, hub)
+    s = fm.summary()
+    for metric in ("ttft_ticks", "tpot_ticks", "queue_wait_ticks"):
+        raw = np.asarray(sum((h.histogram(metric).samples
+                              for h in fleet.hubs.values()), []))
+        for q, key in ((50.0, "p50"), (99.0, "p99")):
+            assert s[metric][key] == float(np.percentile(raw, q)), metric
+    assert s["requests"]["arrived"] == sum(
+        h.counter("requests_arrived").value for h in fleet.hubs.values())
+
+
+def test_fleet_imbalance_stats(fleets):
+    fleet = fleets["round_robin"]
+    fm = FleetMetrics()
+    for node, hub in fleet.hubs.items():
+        fm.add(node, hub)
+    imb = fm.imbalance()
+    assert sum(imb["requests"].values()) == fleet.served
+    assert sum(imb["request_share"].values()) == pytest.approx(1.0)
+    assert imb["queue_depth_spread"] >= 0
+    # round robin on an even stream: shares within one request of equal
+    assert max(imb["requests"].values()) \
+        - min(imb["requests"].values()) <= 1
+
+
+def test_fleet_offline_equals_live(fleets, tmp_path):
+    """from_traces over the saved per-node JSONL reproduces the live fleet
+    summary — one code path offline and live."""
+    fleet = fleets["least_loaded"]
+    live = FleetMetrics()
+    reloaded = {}
+    for node, hub in fleet.hubs.items():
+        live.add(node, hub)
+        p = tmp_path / f"node{node}.jsonl"
+        fleet.traces[node].save(p)
+        reloaded[node] = Trace.load(p)
+    offline = FleetMetrics.from_traces(reloaded)
+    assert offline.summary() == live.summary()
+    assert offline.to_dict() == live.to_dict()
+
+
+# --------------------------------------------------------------------------- #
+# schema v6 + per-replica protocol lint
+# --------------------------------------------------------------------------- #
+def test_v6_header_requires_fleet_fields(fleets):
+    hdr = dict(fleets["least_loaded"].traces[0].header)
+    assert hdr["version"] == SCHEMA_VERSION == 6
+    validate_event(hdr, 6)
+    del hdr["node_id"]
+    with pytest.raises(TraceSchemaError):
+        validate_event(hdr, 6)
+
+
+def test_v5_header_upgrades_to_single_node(fleets):
+    hdr = dict(fleets["least_loaded"].traces[1].header)
+    hdr.pop("node_id")
+    hdr.pop("fleet")
+    hdr["version"] = 5
+    validate_event(hdr, 5)            # old traces stay loadable as-is
+    up = upgrade_event(hdr, 5)
+    assert up["node_id"] == 0
+    assert up["fleet"] is None
+
+
+def test_fleet_headers_carry_node_identity(fleets):
+    for policy, fleet in fleets.items():
+        for node, trace in fleet.traces.items():
+            assert trace.header["node_id"] == node
+            assert trace.header["fleet"] == {"replicas": REPLICAS,
+                                             "routing": policy}
+
+
+def test_per_replica_protocol_lint_clean(fleets):
+    """Every replica's trace passes the serving-protocol lint on its own —
+    dispatch accounting closes per node."""
+    for policy, fleet in fleets.items():
+        for node, trace in fleet.traces.items():
+            findings = lint_trace(trace)
+            errors = [f for f in findings if f.severity == "error"]
+            assert errors == [], (policy, node)
+
+
+def test_fleet_host_sync_lint_clean():
+    """repro.fleet passes the host-sync AST lint with the UNCHANGED
+    allowlist — routing is host bookkeeping, never a device sync."""
+    from repro.verify import lint_host_syncs, load_allowlist
+    root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    allow_path = os.path.join(root, "verify", "sync_allowlist.txt")
+    with open(allow_path) as f:
+        assert "fleet" not in f.read()
+    findings = lint_host_syncs([os.path.join(root, "fleet")],
+                               load_allowlist(allow_path), root=root)
+    assert findings == []
+
+
+# --------------------------------------------------------------------------- #
+# multi-node timeline
+# --------------------------------------------------------------------------- #
+def test_fleet_timeline_per_node_coverage(fleets):
+    """One trace.json, one process group per node, and each node's
+    dispatch-slice count matches its own trace summary exactly."""
+    from repro.launch.stats import check_coverage
+    fleet = fleets["least_loaded"]
+    events = fleet_events(fleet.traces)
+    for node, trace in fleet.traces.items():
+        pid_engine, pid_slots, _sim = fleet_node_pids(node)
+        assert check_coverage(trace, events, pid=pid_engine) == []
+        names = {e["args"]["name"] for e in events
+                 if e["ph"] == "M" and e["name"] == "process_name"
+                 and e["pid"] == pid_engine}
+        assert names == {f"node {node} · serving engine"}
+        assert any(e.get("pid") == pid_slots for e in events)
+    # the fleet queue-depth counter rides on top, summed over nodes
+    fleet_counts = [e for e in events if e["ph"] == "C"
+                    and e["name"] == "fleet_queue_depth"]
+    assert fleet_counts
+    assert max(e["args"]["queued"] for e in fleet_counts) >= max(
+        max((e["args"]["queued"] for e in fleet_events({n: t})
+             if e["ph"] == "C" and e["name"] == "fleet_queue_depth"),
+            default=0)
+        for n, t in fleet.traces.items())
+
+
+def test_node_pids_disjoint():
+    seen = set()
+    for node in range(8):
+        pids = fleet_node_pids(node)
+        assert len(set(pids)) == 3
+        assert not seen & set(pids)
+        seen |= set(pids)
+
+
+# --------------------------------------------------------------------------- #
+# CLIs: launch.fleet + multi-trace launch.stats
+# --------------------------------------------------------------------------- #
+def test_stats_cli_multi_trace(fleets, tmp_path):
+    from repro.launch import stats
+    fleet = fleets["round_robin"]
+    paths = []
+    for node, trace in fleet.traces.items():
+        p = tmp_path / f"node{node}.jsonl"
+        trace.save(p)
+        paths.append(str(p))
+    out = tmp_path / "fleet_metrics.json"
+    tl = tmp_path / "fleet_timeline.json"
+    rc = stats.main(paths + ["--out", str(out), "--timeline", str(tl)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["fleet"]["replicas"] == REPLICAS
+    assert set(report["nodes"]) == {"0", "1"}
+    tlj = json.loads(tl.read_text())
+    assert any(e.get("name") == "fleet_queue_depth"
+               for e in tlj["traceEvents"])
+    # glob form resolves to the same file set
+    rc = stats.main([str(tmp_path / "node*.jsonl")])
+    assert rc == 0
+
+
+def test_stats_cli_single_trace_unchanged(fleets, tmp_path):
+    from repro.launch import stats
+    p = tmp_path / "solo.jsonl"
+    fleets["round_robin"].traces[0].save(p)
+    out = tmp_path / "m.json"
+    assert stats.main([str(p), "--out", str(out)]) == 0
+    report = json.loads(out.read_text())
+    assert "summary" in report           # the single-engine report shape
+
+
+def test_fleet_cli_end_to_end(tmp_path):
+    """The acceptance command, at test scale: fleet CLI writes a metrics
+    JSON whose merged percentiles are exact over all nodes' raw lifecycle
+    samples, plus a coverage-checked multi-node timeline."""
+    from repro.launch import fleet as fleet_cli
+    metrics = tmp_path / "fleet_metrics.json"
+    timeline = tmp_path / "fleet_timeline.json"
+    rc = fleet_cli.main(["--replicas", "2", "--routing", "least_loaded",
+                         "--horizon", "16", "--burst", "6", "--idle", "10",
+                         "--metrics-out", str(metrics),
+                         "--timeline-out", str(timeline)])
+    assert rc == 0
+    report = json.loads(metrics.read_text())
+    s = report["fleet"]
+    assert s["replicas"] == 2
+    for metric in ("ttft_ticks", "tpot_ticks"):
+        raw = []
+        for node in report["nodes"].values():
+            if metric == "ttft_ticks":
+                raw += [r["ttft"] for r in node["requests"]
+                        if r["ttft"] is not None]
+        if metric == "ttft_ticks":
+            for q, key in ((50.0, "p50"), (99.0, "p99")):
+                assert s[metric][key] \
+                    == float(np.percentile(np.asarray(raw), q))
+    tlj = json.loads(timeline.read_text())
+    assert any(e.get("name") == "fleet_queue_depth"
+               for e in tlj["traceEvents"])
+
+
+def test_unknown_routing_rejected():
+    with pytest.raises(ValueError):
+        make_router("random", 2)
+
+
+def test_replica_serves_share_jitted_fns(setup):
+    """N replicas of one config share the lru-cached jitted step fns —
+    fleet replay compiles once, not once per node."""
+    from repro.serve.engine import _jit_decode
+    cfg, params = setup
+    e1 = ServeEngine(cfg, params, _scfg())
+    e2 = ServeEngine(cfg, params, _scfg())
+    assert e1._decode is e2._decode
+    assert _jit_decode(cfg) is e1._decode
