@@ -1,0 +1,219 @@
+"""Chaos serving CI guard: fault injection must not change the answer.
+
+Serves ONE bursty open-loop arrival stream through a 3-replica fleet
+twice — fault-free (``serve_fleet``) and under the committed chaos plan
+(``data/chaos_plan.json``: a mid-burst node crash plus a PIM-degraded
+window) via ``repro.chaos.serve_fleet_chaos`` — and holds the recovery
+path to its guarantees:
+
+    PYTHONPATH=src python benchmarks/chaos_guard.py            # check
+    PYTHONPATH=src python benchmarks/chaos_guard.py --record   # rebase
+
+Four gates, all CI-fatal and all checked on every run (--record included
+— a baseline must never be recorded with a broken invariant):
+
+  * TOKEN IDENTITY: every request's generated tokens under chaos must be
+    byte-identical to the fault-free run — failover re-prefill recovery
+    is only recovery if the answer does not change;
+  * GOODPUT 1.0: the plan leaves survivors with capacity, so every
+    offered request must complete (nothing failed, rejected, or dropped);
+  * EXACTLY-ONCE: ``repro.verify.check_exactly_once`` over the per-node
+    chaos traces must report zero findings;
+  * determinism vs the committed ``data/chaos_baseline.json``: recovery
+    counts, re-prefill overhead, MTTR, and per-class fault counts are
+    exact-match (the chaos clock is seeded and tick-deterministic, so ANY
+    drift is a replay break, not noise).
+
+``--record`` also refreshes the committed per-node chaos traces
+(``data/chaos_node{N}.jsonl``) so ``python -m repro.launch.verify
+--traces benchmarks/data`` exercises the exactly-once pass on a real
+crash trace in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from dispatch_guard import SERVE  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.chaos import FaultPlan, serve_fleet_chaos  # noqa: E402
+from repro.configs import get_arch  # noqa: E402
+from repro.fleet import FleetMetrics, serve_fleet  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.models.params import init_params  # noqa: E402
+from repro.serve import ServeConfig  # noqa: E402
+from repro.trace.arrivals import bursty_arrivals  # noqa: E402
+from repro.verify import check_exactly_once  # noqa: E402
+
+DATA_DIR = os.path.join(os.path.dirname(__file__), "data")
+DEFAULT_BASELINE = os.path.join(DATA_DIR, "chaos_baseline.json")
+DEFAULT_PLAN = os.path.join(DATA_DIR, "chaos_plan.json")
+
+REPLICAS = 3
+ROUTING = "least_loaded"
+
+# the guarded bursty workload (SERVE is imported from dispatch_guard: one
+# source of truth for the smoke serve shape); change either — or the
+# committed plan — and the baseline must be re-recorded
+WORKLOAD = dict(rate=1.0, horizon=48, burst=8, idle=8,
+                prompt_len=(2, 40), max_new=(3, 10), seed=7)
+
+# exact-match guarded chaos metrics: seeded ticks make these replay
+# constants, so equality (not <=) is the right comparison
+GUARDED = ("goodput", "completed", "offered", "recovered",
+           "reprefill_tokens", "crash_inflight")
+
+
+def run_pair(plan):
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
+    arrivals = bursty_arrivals(WORKLOAD["rate"], WORKLOAD["horizon"],
+                               vocab=cfg.vocab_size,
+                               burst=WORKLOAD["burst"],
+                               idle=WORKLOAD["idle"],
+                               prompt_len=WORKLOAD["prompt_len"],
+                               max_new=WORKLOAD["max_new"],
+                               seed=WORKLOAD["seed"])
+    ref = serve_fleet(cfg, params, ServeConfig(**SERVE), arrivals,
+                      replicas=REPLICAS, routing=ROUTING)
+    chaos = serve_fleet_chaos(cfg, params, ServeConfig(**SERVE), arrivals,
+                              plan, replicas=REPLICAS, routing=ROUTING)
+    return ref, chaos, arrivals
+
+
+def collect(plan):
+    ref, chaos, arrivals = run_pair(plan)
+    fm = FleetMetrics.from_traces(chaos.traces)
+    c = fm.chaos_summary()
+    cur = {
+        "workload": {
+            "workload": {k: list(v) if isinstance(v, tuple) else v
+                         for k, v in WORKLOAD.items()},
+            "serve": {k: list(v) if isinstance(v, tuple) else v
+                      for k, v in SERVE.items()},
+            "replicas": REPLICAS, "routing": ROUTING,
+            "plan": plan.to_dict(),
+        },
+        "chaos": {k: c[k] for k in GUARDED},
+        "mttr_ticks": c["mttr_ticks"],
+        "faults": c["faults"],
+        "recoveries": len(chaos.recoveries),
+        "failed": sorted(chaos.failed),
+        "rejected": sorted(chaos.rejected),
+    }
+    return cur, ref, chaos, arrivals
+
+
+def invariants(cur, ref, chaos, arrivals):
+    """The always-on gates: token identity, goodput, exactly-once."""
+    failures = []
+    got, want = chaos.tokens_by_gid(), ref.tokens_by_gid()
+    diverged = [g for g in want if got.get(g) != want[g]]
+    if set(got) != set(want) or diverged:
+        failures.append(f"token identity broke for gid(s) "
+                        f"{diverged or sorted(set(want) ^ set(got))}")
+    if cur["chaos"]["goodput"] != 1.0 or \
+            cur["chaos"]["completed"] != len(arrivals):
+        failures.append(
+            f"goodput {cur['chaos']['goodput']:g} "
+            f"({cur['chaos']['completed']}/{len(arrivals)}) — the plan "
+            f"leaves capacity, every request must complete")
+    findings = check_exactly_once(list(chaos.traces.values()))
+    for f in findings:
+        failures.append(f"exactly_once: {f.severity} {f.klass} "
+                        f"[{f.location}] {f.message}")
+    if not chaos.recoveries:
+        failures.append("the crash recovered nothing in flight — the plan "
+                        "no longer exercises failover; move the crash tick")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--plan", default=DEFAULT_PLAN)
+    ap.add_argument("--record", action="store_true",
+                    help="write current chaos numbers as the new baseline "
+                         "and refresh the committed per-node chaos traces")
+    ap.add_argument("--out", default=None,
+                    help="also write the full report JSON here (CI "
+                         "artifact)")
+    args = ap.parse_args(argv)
+
+    if os.path.exists(args.plan):
+        plan = FaultPlan.load(args.plan)
+    else:
+        if not args.record:
+            print(f"[chaos-guard] error: no fault plan at {args.plan} "
+                  f"(run --record to create it)")
+            return 1
+        plan = FaultPlan.from_spec(
+            "node_crash,node=1,step=10;pim_degraded,node=0,step=6,until=24")
+    plan.validate(REPLICAS)
+
+    cur, ref, chaos, arrivals = collect(plan)
+    c = cur["chaos"]
+    print(f"[chaos-guard] {len(plan.events)} fault(s): goodput "
+          f"{c['goodput']:g} ({c['completed']}/{c['offered']}), "
+          f"{c['recovered']} recovered, {c['reprefill_tokens']} re-prefill "
+          f"tokens, {c['crash_inflight']} in flight at crash")
+    if cur["mttr_ticks"]:
+        for kind, h in sorted(cur["mttr_ticks"].items()):
+            print(f"[chaos-guard] MTTR {kind}: n={h['count']} "
+                  f"mean={h['mean']:g} max={h['max']:g} ticks")
+
+    failures = invariants(cur, ref, chaos, arrivals)
+    if failures:
+        print("[chaos-guard] FAIL: " + "; ".join(failures))
+        return 1
+    print("[chaos-guard] invariants OK: tokens identical to fault-free, "
+          "goodput 1.0, exactly-once clean")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(cur, f, indent=2)
+        print(f"[chaos-guard] wrote report -> {args.out}")
+    if args.record:
+        os.makedirs(DATA_DIR, exist_ok=True)
+        plan.save(args.plan)
+        with open(args.baseline, "w") as f:
+            json.dump(cur, f, indent=2)
+        for node, trace in chaos.traces.items():
+            path = os.path.join(DATA_DIR, f"chaos_node{node}.jsonl")
+            trace.save(path)
+        print(f"[chaos-guard] recorded baseline -> {args.baseline}, plan "
+              f"-> {args.plan}, traces -> "
+              f"{DATA_DIR}/chaos_node{{0..{REPLICAS - 1}}}.jsonl")
+        return 0
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    if base["workload"] != cur["workload"]:
+        print("[chaos-guard] FAIL: workload/plan definition changed — "
+              "re-record the baseline (--record)")
+        return 1
+    drift = []
+    for key in GUARDED:
+        if cur["chaos"][key] != base["chaos"][key]:
+            drift.append(f"chaos.{key} {cur['chaos'][key]!r} != baseline "
+                         f"{base['chaos'][key]!r}")
+    for key in ("mttr_ticks", "faults", "recoveries", "failed", "rejected"):
+        if cur[key] != base[key]:
+            drift.append(f"{key} {cur[key]!r} != baseline {base[key]!r}")
+    if drift:
+        print("[chaos-guard] FAIL: chaos replay drifted from baseline "
+              "(seeded ticks are deterministic — this is a replay break): "
+              + "; ".join(drift))
+        return 1
+    print("[chaos-guard] OK: chaos replay exactly matches baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

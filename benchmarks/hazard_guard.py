@@ -41,7 +41,7 @@ SRC_ROOT = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
 
 
 def collect_findings():
-    """Serve the guarded workload with a recorder and run all four verify
+    """Serve the guarded workload with a recorder and run the per-trace verify
     passes. Returns (findings, trace)."""
     rec = TraceRecorder()
     run_workload(recorder=rec)
@@ -60,7 +60,8 @@ def collect_findings():
         allowlist = load_allowlist(allow_path)
     findings.extend(lint_host_syncs(
         [os.path.join(SRC_ROOT, "serve"), os.path.join(SRC_ROOT, "sched"),
-         os.path.join(SRC_ROOT, "obs"), os.path.join(SRC_ROOT, "fleet")],
+         os.path.join(SRC_ROOT, "obs"), os.path.join(SRC_ROOT, "fleet"),
+         os.path.join(SRC_ROOT, "chaos")],
         allowlist, root=SRC_ROOT))
     return findings, trace
 

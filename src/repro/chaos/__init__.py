@@ -1,0 +1,22 @@
+"""Chaos-tolerant fleet serving: deterministic fault injection
+(``repro.chaos.faults``) and failover re-prefill recovery
+(``repro.chaos.recovery``) over the fleet replayer.
+
+The contract: a seeded ``FaultPlan`` replayed through
+``serve_fleet_chaos`` is bit-deterministic — identical fault schedule,
+routing decisions, recovery placements and greedy tokens every run — and
+exactly-once: every arrival ends ``completed`` (on exactly one node,
+with tokens identical to the fault-free run), ``failed`` or
+``rejected``, never silently dropped. ``repro.verify.exactly_once``
+audits the recorded traces for all of it.
+"""
+from repro.chaos.faults import (DEGRADED_PENALTY, FAULT_KINDS, FaultEvent,
+                                FaultPlan, FleetHealth)
+from repro.chaos.recovery import (ChaosResult, RecoveryItem,
+                                  inflight_from_events, serve_fleet_chaos)
+
+__all__ = [
+    "DEGRADED_PENALTY", "FAULT_KINDS", "FaultEvent", "FaultPlan",
+    "FleetHealth", "ChaosResult", "RecoveryItem", "inflight_from_events",
+    "serve_fleet_chaos",
+]

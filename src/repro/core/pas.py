@@ -354,14 +354,28 @@ def decode_uses_gemv(batch_per_device: int, hw: HardwareModel = TPU_V5E) -> bool
 
 def phase_log_entry(phase: str, n_tokens: int, active: int,
                     d_model: int, d_ff: int,
-                    hw: HardwareModel = TPU_V5E) -> dict:
+                    hw: HardwareModel = TPU_V5E,
+                    force_mu: bool = False) -> dict:
     """One serving-step record for the engine's PAS log.
 
     ``phase`` is "summarization" (batched prefill: n_tokens = prompt tokens
     in the dispatch) or "generation" (decode: n_tokens = active slots).
     The routing decision is per-phase — the paper's core observation is that
-    the two phases land on opposite sides of the GEMM/GEMV crossover."""
+    the two phases land on opposite sides of the GEMM/GEMV crossover.
+
+    ``force_mu`` models a PIM-degraded node (unified-memory premise, §5: a
+    PIM fault does not kill the node, it forces normal-access-only
+    operation): every FC maps to the MU/GEMM path regardless of the
+    crossover, so the recorded trace replays NPU-only execution."""
     n = max(n_tokens, 1)
+    if force_mu:
+        return {
+            "phase": phase,
+            "tokens": n_tokens,
+            "active": active,
+            "gemv_path": False,
+            "ffn_route": "gemm",
+        }
     return {
         "phase": phase,
         "tokens": n_tokens,

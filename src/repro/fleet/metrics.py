@@ -110,6 +110,59 @@ class FleetMetrics:
                 "makespan_max": max(u["makespan"]
                                     for u in per_node.values())}
 
+    def chaos_summary(self) -> Optional[dict]:
+        """Fleet-wide chaos rollup (None for a fault-free fleet):
+
+        goodput          unique COMPLETED gids over unique OFFERED gids
+                         (offered = every arrival that ever entered the
+                         fleet: placed, failed or rejected) — completions
+                         deduplicate across nodes, so a request that
+                         failed over counts once, on its final node.
+        mttr_ticks       per fault class: node_crash uses the recovery
+                         downtime (crash tick -> re-prefill re-entering
+                         service on the new node); window faults use
+                         their recorded [begin, end) durations.
+        reprefill_tokens total re-prefilled prompt+prefix tokens — the
+                         FLOP overhead failover paid for exactly-once.
+        """
+        if all(h.chaos_summary() is None for h in self.hubs.values()):
+            return None
+        m = self.merged()
+        completed: set = set()
+        arrived: set = set()
+        failed: set = set()
+        rejected: set = set()
+        for h in self.hubs.values():
+            completed |= h.completed_gids()
+            arrived |= h.arrived_gids()
+            failed |= h.failed_gids
+            rejected |= h.rejected_gids
+        offered = arrived | failed | rejected
+        dup = sorted(g for g in completed if sum(
+            g in h.completed_gids() for h in self.hubs.values()) > 1)
+        mttr = {"node_crash":
+                m.histogram("recovery_downtime_ticks").summary()}
+        for name in sorted(m._metrics):
+            if name.startswith("fault_window_"):
+                mttr[name[len("fault_window_"):]] = \
+                    m._metrics[name].summary()
+        return {
+            "offered": len(offered),
+            "completed": len(completed),
+            "failed": sorted(failed),
+            "rejected": sorted(rejected),
+            "goodput": (len(completed) / len(offered) if offered else 1.0),
+            "duplicate_completions": dup,
+            "recovered": m.counter("requests_recovered").value,
+            "crash_inflight": m.counter("crash_inflight").value,
+            "reprefill_tokens":
+                m.counter("recovery_reprefill_tokens").value,
+            "mttr_ticks": mttr,
+            "faults": {n[len("faults_"):]: m._metrics[n].value
+                       for n in sorted(m._metrics)
+                       if n.startswith("faults_")},
+        }
+
     # ---- reports ----------------------------------------------------------- #
     def summary(self) -> dict:
         m = self.merged()
@@ -132,6 +185,7 @@ class FleetMetrics:
             "slots_busy": m.gauge("slots_busy").to_dict(),
             "imbalance": self.imbalance(),
             "utilization": self.utilization(),
+            "chaos": self.chaos_summary(),
         }
 
     def to_dict(self) -> dict:

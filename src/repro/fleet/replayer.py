@@ -89,7 +89,7 @@ def serve_fleet(cfg, params, scfg, arrivals: List[ArrivalEvent], *,
             a = arrivals[gid]
             node = router.route(a.prompt, ordered)
             rid = engines[node].add_request(a.prompt, a.max_new,
-                                            arrival_step=a.step)
+                                            arrival_step=a.step, gid=gid)
             assignments.append((gid, node, rid))
             i += 1
         if i >= len(pending) and all(

@@ -5,7 +5,12 @@
       --replay
 
 Serves a bursty open-loop smoke workload (one arrival stream, the shared
-fleet clock) through N replicas, then reports:
+fleet clock) through N replicas — optionally under a chaos fault plan
+(``--fault-plan`` takes a JSON file or an inline spec like
+``node_crash,node=1,step=12;pim_degraded,node=0,step=8,until=20``; the
+fleet then runs ``repro.chaos.serve_fleet_chaos`` with failover
+re-prefill recovery and reports goodput / recovery overhead) — then
+reports:
 
   --metrics-out   the fleet metrics JSON: ``FleetMetrics`` summary (merged
                   p50/p95/p99 TTFT/TPOT/queue-wait — lossless sample
@@ -31,6 +36,7 @@ import sys
 
 import jax
 
+from repro.chaos import FaultPlan, serve_fleet_chaos
 from repro.configs import get_arch
 from repro.fleet import ROUTING_POLICIES, FleetMetrics, serve_fleet
 from repro.launch.stats import check_coverage
@@ -52,7 +58,7 @@ def main(argv=None):
                          "dims)")
     ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--routing", default="least_loaded",
-                    choices=list(ROUTING_POLICIES))
+                    help=f"one of {', '.join(ROUTING_POLICIES)}")
     ap.add_argument("--prefix-len", type=int, default=8,
                     help="prompt-prefix tokens hashed by prefix_affinity")
     # the bursty open-loop workload (one stream for the whole fleet)
@@ -79,7 +85,39 @@ def main(argv=None):
     ap.add_argument("--replay", action="store_true",
                     help="replay each node's trace through the simulator "
                          "for per-node + fleet NPU/PIM utilization")
+    # chaos serving (repro.chaos)
+    ap.add_argument("--fault-plan", default=None,
+                    help="chaos fault plan: a JSON file path or an inline "
+                         "spec (kind,node=N,step=T[,until=U][,factor=F]"
+                         "[,cap=C];...)")
+    ap.add_argument("--retry-budget", type=int, default=3,
+                    help="placement attempts per request before terminal "
+                         "failed/reject")
+    ap.add_argument("--backoff", type=int, default=1,
+                    help="base re-placement backoff in fleet ticks "
+                         "(doubles per retry)")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bounded admission queue per replica (0 = "
+                         "unbounded)")
     args = ap.parse_args(argv)
+
+    if args.routing not in ROUTING_POLICIES:
+        print(f"[fleet] error: unknown routing policy {args.routing!r} "
+              f"(choose from {', '.join(ROUTING_POLICIES)})")
+        return 1
+    plan = None
+    if args.fault_plan is not None:
+        try:
+            if os.path.exists(args.fault_plan) or \
+                    args.fault_plan.endswith(".json"):
+                plan = FaultPlan.load(args.fault_plan)
+            else:
+                plan = FaultPlan.from_spec(args.fault_plan)
+            plan.validate(args.replicas)
+        except (OSError, ValueError, KeyError, TypeError,
+                json.JSONDecodeError) as e:
+            print(f"[fleet] error: bad fault plan {args.fault_plan!r}: {e}")
+            return 1
 
     cfg = get_arch(args.arch)
     if not args.full:
@@ -87,17 +125,32 @@ def main(argv=None):
     params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
     scfg = ServeConfig(max_slots=args.slots, max_len=args.max_len,
                        prefill_chunk=args.prefill_chunk, policy=args.policy,
-                       pack=True, fuse=True, superstep=args.superstep)
+                       pack=True, fuse=True, superstep=args.superstep,
+                       queue_cap=args.queue_cap)
     arrivals = bursty_arrivals(args.rate, args.horizon,
                                vocab=cfg.vocab_size,
                                burst=args.burst, idle=args.idle,
                                prompt_len=(2, args.max_len - 24),
                                max_new=(3, 10), seed=args.seed)
-    fleet = serve_fleet(cfg, params, scfg, arrivals,
-                        replicas=args.replicas, routing=args.routing,
-                        prefix_len=args.prefix_len)
+    if plan is not None:
+        if args.traces_out:
+            # chaos serving streams crash-safe JSONL as it runs — the
+            # directory must exist before the recorders bind
+            os.makedirs(args.traces_out, exist_ok=True)
+        fleet = serve_fleet_chaos(cfg, params, scfg, arrivals, plan,
+                                  replicas=args.replicas,
+                                  routing=args.routing,
+                                  prefix_len=args.prefix_len,
+                                  retry_budget=args.retry_budget,
+                                  backoff=args.backoff,
+                                  stream_dir=args.traces_out)
+    else:
+        fleet = serve_fleet(cfg, params, scfg, arrivals,
+                            replicas=args.replicas, routing=args.routing,
+                            prefix_len=args.prefix_len)
     print(f"[fleet] {args.replicas} replicas, routing={fleet.routing}: "
-          f"{len(arrivals)} arrivals, {fleet.served} served")
+          f"{len(arrivals)} arrivals, {fleet.served} served"
+          + (f", {len(plan.events)} scheduled fault(s)" if plan else ""))
 
     fm = FleetMetrics()
     for node, hub in fleet.hubs.items():
@@ -149,6 +202,13 @@ def main(argv=None):
         u = fs["utilization"]["fleet"]
         print(f"[fleet] fleet utilization: MU {u['mu']:.1%} / "
               f"PIM {u['pim']:.1%}")
+    if fs.get("chaos"):
+        c = fs["chaos"]
+        print(f"[fleet] chaos: goodput {c['goodput']:.2f} "
+              f"({c['completed']}/{c['offered']}), "
+              f"{c['recovered']} recovered "
+              f"({c['reprefill_tokens']} re-prefill tokens), "
+              f"{len(c['failed'])} failed, {len(c['rejected'])} rejected")
 
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:

@@ -99,12 +99,33 @@ def _print_summary(s: dict) -> None:
 
 def _expand(patterns: List[str]) -> List[str]:
     """Shell-unexpanded globs (quoted, or from CI YAML) expand here; plain
-    paths pass through."""
+    paths pass through. A glob matching NOTHING is a hard error — a typo'd
+    pattern must not silently shrink the fleet being reported on."""
     paths: List[str] = []
     for p in patterns:
-        hits = sorted(globlib.glob(p))
-        paths += hits if hits else [p]
+        if any(ch in p for ch in "*?["):
+            hits = sorted(globlib.glob(p))
+            if not hits:
+                raise FileNotFoundError(f"glob {p!r} matched no trace files")
+            paths += hits
+        else:
+            paths.append(p)
     return paths
+
+
+def _load_trace(path: str) -> Trace:
+    """Load one trace with CLI-grade errors (one line, no traceback)."""
+    from repro.trace.schema import TraceSchemaError
+    try:
+        return Trace.load(path)
+    except FileNotFoundError:
+        raise SystemExit(f"[stats] error: trace file not found: {path}")
+    except IsADirectoryError:
+        raise SystemExit(f"[stats] error: {path} is a directory, not a "
+                         f"trace file")
+    except (TraceSchemaError, json.JSONDecodeError, OSError,
+            UnicodeDecodeError) as e:
+        raise SystemExit(f"[stats] error: unreadable trace {path}: {e}")
 
 
 def _fleet_report(paths: List[str], args) -> int:
@@ -112,7 +133,7 @@ def _fleet_report(paths: List[str], args) -> int:
     emit one multi-node timeline (per-node coverage enforced)."""
     from repro.fleet import FleetMetrics
 
-    loaded = [Trace.load(p) for p in paths]
+    loaded = [_load_trace(p) for p in paths]
     node_ids = [int(tr.header.get("node_id", 0)) for tr in loaded]
     if len(set(node_ids)) != len(node_ids):
         # standalone traces (all node 0) or mixed sets: position in the
@@ -143,6 +164,13 @@ def _fleet_report(paths: List[str], args) -> int:
         print(f"[stats] {name:>16}: n={h['count']:>4} mean={h['mean']:.2f} "
               f"p50={h['p50']:.1f} p95={h['p95']:.1f} p99={h['p99']:.1f} "
               f"max={h['max']:.0f}")
+    if s.get("chaos"):
+        c = s["chaos"]
+        print(f"[stats] chaos: goodput {c['goodput']:.2f} "
+              f"({c['completed']}/{c['offered']} offered), "
+              f"{c['recovered']} recovered, {len(c['failed'])} failed, "
+              f"{len(c['rejected'])} rejected, "
+              f"{c['reprefill_tokens']} re-prefill tokens")
     share = s["imbalance"]["request_share"]
     print(f"[stats] request share: "
           + "  ".join(f"node{n}={share[n]:.2f}" for n in sorted(share))
@@ -201,11 +229,15 @@ def main(argv: Optional[list] = None) -> int:
                          "instead of the dims recorded in the header")
     args = ap.parse_args(argv)
 
-    paths = _expand(args.trace)
+    try:
+        paths = _expand(args.trace)
+    except FileNotFoundError as e:
+        print(f"[stats] error: {e}")
+        return 1
     if len(paths) > 1:
         return _fleet_report(paths, args)
 
-    trace = Trace.load(paths[0])
+    trace = _load_trace(paths[0])
     hub = build_report(trace)
     summary = hub.summary()
     _print_summary(summary)

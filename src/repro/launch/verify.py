@@ -6,12 +6,16 @@
 Three passes per ``*.jsonl`` trace under ``--traces`` (none execute device
 code): the serving-protocol lint (``verify.protocol``), the per-dispatch-
 span hazard analysis over the lowered command DAGs (``verify.hazards``),
-and the reference-DAG diff of every lowered step. Plus one AST pass over
-``<src>/serve``, ``<src>/sched``, ``<src>/obs`` and ``<src>/fleet`` for
-host-sync calls outside the allowlist (default:
-``<src>/verify/sync_allowlist.txt`` when present) — observability and
-fleet routing both ride the recorder's event stream / host bookkeeping
-and must stay sync-free by construction.
+and the reference-DAG diff of every lowered step. Traces are then grouped
+by fleet (identical ``fleet`` header on schema-v6+ traces; solo traces
+form singleton groups) and each group is audited by the exactly-once pass
+(``verify.exactly_once``): no activity after a recorded crash, no
+duplicate completions across replicas, every arrival accounted. Plus one
+AST pass over ``<src>/serve``, ``<src>/sched``, ``<src>/obs``,
+``<src>/fleet`` and ``<src>/chaos`` for host-sync calls outside the
+allowlist (default: ``<src>/verify/sync_allowlist.txt`` when present) —
+observability, fleet routing and chaos recovery all ride the recorder's
+event stream / host bookkeeping and must stay sync-free by construction.
 
 Exit status 1 when any error-severity finding survives; ``--out`` dumps
 the full finding list as JSON (the format ``benchmarks/hazard_guard.py``
@@ -28,8 +32,9 @@ from typing import List
 
 from repro.trace.lower import trace_to_commands
 from repro.trace.schema import Trace, TraceSchemaError
-from repro.verify import (Finding, analyze_lowered, lint_host_syncs,
-                          lint_trace, load_allowlist, verify_lowered_step)
+from repro.verify import (Finding, analyze_lowered, check_exactly_once,
+                          lint_host_syncs, lint_trace, load_allowlist,
+                          verify_lowered_step)
 from repro.trace.schema import model_config_from_header
 
 
@@ -72,12 +77,36 @@ def main(argv=None) -> int:
     findings: List[Finding] = []
     scanned = []
     if args.traces:
+        loaded = []
         for path in sorted(glob.glob(os.path.join(args.traces, "*.jsonl"))):
             fs = verify_trace_file(path, max_steps=args.max_steps)
             for f in fs:
                 print(f"[verify] {path}: {f.severity} {f.klass} "
                       f"[{f.location}] {f.message}")
             scanned.append((path, len(fs)))
+            findings.extend(fs)
+            try:
+                loaded.append((path, Trace.load(path)))
+            except TraceSchemaError:
+                pass        # already reported by verify_trace_file
+        # exactly-once runs per FLEET: traces sharing a fleet header are
+        # one run's replicas; solo/fleetless traces audit on their own
+        groups = {}
+        for path, tr in loaded:
+            if tr.header.get("fleet") is None:
+                key = f"solo:{path}"
+            else:
+                key = json.dumps([tr.header["fleet"],
+                                  tr.header.get("chaos")], sort_keys=True)
+            groups.setdefault(key, []).append((path, tr))
+        for key, members in sorted(groups.items()):
+            fs = check_exactly_once([tr for _, tr in members])
+            names = ", ".join(p for p, _ in members)
+            for f in fs:
+                print(f"[verify] exactly_once[{names}]: {f.severity} "
+                      f"{f.klass} [{f.location}] {f.message}")
+            print(f"[verify] exactly_once over {len(members)} trace(s) "
+                  f"[{names}]: {len(fs)} finding(s)")
             findings.extend(fs)
     allowlist = []
     allow_path = args.allowlist or os.path.join(args.src, "verify",
@@ -87,7 +116,8 @@ def main(argv=None) -> int:
     lint_dirs = [d for d in (os.path.join(args.src, "serve"),
                              os.path.join(args.src, "sched"),
                              os.path.join(args.src, "obs"),
-                             os.path.join(args.src, "fleet"))
+                             os.path.join(args.src, "fleet"),
+                             os.path.join(args.src, "chaos"))
                  if os.path.isdir(d)]
     sync = lint_host_syncs(lint_dirs, allowlist, root=args.src)
     for f in sync:

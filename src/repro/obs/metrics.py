@@ -220,6 +220,7 @@ class RequestLifecycle:
     injected: int                 # tick the engine actually saw it
     prompt_len: int
     max_new: int
+    gid: Optional[int] = None     # fleet-global id (schema v7); == rid solo
     admit: Optional[int] = None
     slot: Optional[int] = None
     prefill_steps: List[int] = field(default_factory=list)
@@ -236,7 +237,7 @@ class RequestLifecycle:
         return self.first_token - self.arrival
 
     def to_dict(self) -> dict:
-        return {"rid": self.rid, "arrival": self.arrival,
+        return {"rid": self.rid, "gid": self.gid, "arrival": self.arrival,
                 "injected": self.injected, "prompt_len": self.prompt_len,
                 "max_new": self.max_new, "admit": self.admit,
                 "slot": self.slot, "prefill_steps": list(self.prefill_steps),
@@ -258,6 +259,10 @@ class MetricsHub:
         self._queue_depth = 0
         self._slots_busy = 0
         self._superstep_ids: set = set()
+        # terminal chaos outcomes land on ONE node's recorder (the lowest
+        # alive id) but are fleet-scoped — keyed by gid for the rollup
+        self.failed_gids: set = set()
+        self.rejected_gids: set = set()
 
     # ---- registry ---------------------------------------------------------- #
     def _get(self, cls, name: str):
@@ -313,7 +318,8 @@ class MetricsHub:
         arrival = step - int(ev.get("arrival_offset", 0))
         self.requests[ev["rid"]] = RequestLifecycle(
             rid=int(ev["rid"]), arrival=arrival, injected=step,
-            prompt_len=int(ev["prompt_len"]), max_new=int(ev["max_new"]))
+            prompt_len=int(ev["prompt_len"]), max_new=int(ev["max_new"]),
+            gid=int(ev.get("gid", ev["rid"])))
         self.counter("requests_arrived").inc()
         self.histogram("prompt_len").observe(ev["prompt_len"])
         self._queue_depth += 1
@@ -403,6 +409,45 @@ class MetricsHub:
         self._slots_busy -= 1
         self.gauge("slots_busy").set(step, self._slots_busy)
 
+    # ---- chaos events (schema v7, repro.chaos) ----------------------------- #
+    def _on_fault(self, ev: dict) -> None:
+        kind, phase, step = ev["kind"], ev["phase"], int(ev["step"])
+        if phase == "begin":
+            self.counter(f"faults_{kind}").inc()
+            if kind == "node_crash":
+                # the node is gone: its queued/resident load leaves the
+                # fleet's merged gauges at the crash tick (the failover
+                # re-arrivals re-enter on surviving nodes' hubs)
+                self.counter("crash_inflight").inc(int(ev.get("inflight", 0)))
+                self._queue_depth = 0
+                self._slots_busy = 0
+                self.gauge("queue_depth").set(step, 0)
+                self.gauge("slots_busy").set(step, 0)
+        elif phase == "end" and "since" in ev:
+            self.histogram(f"fault_window_{kind}").observe(
+                step - int(ev["since"]))
+
+    def _on_recover(self, ev: dict) -> None:
+        # fires on the DESTINATION node's hub: failover landed here
+        self.counter("requests_recovered").inc()
+        self.counter("recovery_reprefill_tokens").inc(
+            int(ev["reprefill_tokens"]))
+        # downtime = crash tick -> the re-prefill re-entering service; the
+        # per-gid MTTR-to-next-token joins this with the new lifecycle
+        self.histogram("recovery_downtime_ticks").observe(
+            int(ev["step"]) - int(ev["crash_step"]))
+        self.histogram("recovery_retries").observe(int(ev["retry"]))
+
+    def _on_failed(self, ev: dict) -> None:
+        self.counter("requests_failed").inc()
+        self.counter(f"failed_{ev['reason']}").inc()
+        self.failed_gids.add(int(ev["gid"]))
+
+    def _on_reject(self, ev: dict) -> None:
+        self.counter("requests_rejected").inc()
+        self.counter(f"rejected_{ev['reason']}").inc()
+        self.rejected_gids.add(int(ev["gid"]))
+
     def _on_summary(self, ev: dict) -> None:
         self.engine_summary = ev
 
@@ -425,6 +470,40 @@ class MetricsHub:
             # superstep span — i.e. per decode-family dispatch
             "host_syncs": (self.counter("decode_dispatches").value
                            + self.counter("fused_dispatches").value),
+        }
+
+    def completed_gids(self) -> set:
+        """Global ids of requests that COMPLETED on this node — the
+        per-node input to the fleet's exactly-once / goodput rollup."""
+        return {lc.gid for lc in self.requests.values()
+                if lc.complete is not None and lc.gid is not None}
+
+    def arrived_gids(self) -> set:
+        return {lc.gid for lc in self.requests.values()
+                if lc.gid is not None}
+
+    def chaos_summary(self) -> Optional[dict]:
+        """Per-node chaos report, or None for a fault-free serve."""
+        names = [n for n in self._metrics
+                 if n.startswith(("faults_", "failed_", "rejected_"))
+                 or n in ("requests_recovered", "requests_failed",
+                          "requests_rejected", "crash_inflight")]
+        if not names:
+            return None
+        return {
+            "faults": {n[len("faults_"):]: self._metrics[n].value
+                       for n in names if n.startswith("faults_")},
+            "fault_windows": {
+                n[len("fault_window_"):]: self._metrics[n].summary()
+                for n in self._metrics if n.startswith("fault_window_")},
+            "recovered": self.counter("requests_recovered").value,
+            "failed": self.counter("requests_failed").value,
+            "rejected": self.counter("requests_rejected").value,
+            "crash_inflight": self.counter("crash_inflight").value,
+            "reprefill_tokens":
+                self.counter("recovery_reprefill_tokens").value,
+            "recovery_downtime_ticks":
+                self.histogram("recovery_downtime_ticks").summary(),
         }
 
     def valid_token_fraction(self) -> float:
@@ -458,6 +537,7 @@ class MetricsHub:
             "prompt_len": self.histogram("prompt_len").summary(),
             "valid_token_fraction": self.valid_token_fraction(),
             "dispatch_mix": self.dispatch_mix(),
+            "chaos": self.chaos_summary(),
             # per-step-kind mix the scheduler ticked (serialized /
             # overlapped / fused / superstep / ...), when recorded
             "sched_stats": dict(self.engine_summary["sched_stats"])

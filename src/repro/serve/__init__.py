@@ -1,3 +1,4 @@
-from repro.serve.engine import ServeConfig, ServeEngine, Request
+from repro.serve.engine import (AdmissionRejected, Request, ServeConfig,
+                                ServeEngine)
 
-__all__ = ["ServeConfig", "ServeEngine", "Request"]
+__all__ = ["AdmissionRejected", "ServeConfig", "ServeEngine", "Request"]

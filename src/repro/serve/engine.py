@@ -206,6 +206,17 @@ class ServeConfig:
     # fetch per superstep. Schedulers cap the step length via
     # choose_superstep so admission latency stays bounded (1 = disabled).
     superstep: int = 1
+    # admission-queue capacity: ``add_request`` raises AdmissionRejected
+    # once this many requests are already queued (0 = unbounded). Open-loop
+    # drivers re-inject rejected arrivals with backoff instead of losing
+    # them (trace/arrivals.drive, chaos replayer queue_reject faults).
+    queue_cap: int = 0
+
+
+class AdmissionRejected(RuntimeError):
+    """The admission queue is at capacity; the arrival was NOT enqueued.
+    Callers own the retry (backoff re-injection) or the terminal-reject
+    record — a rejected request is never silently dropped."""
 
 
 @dataclass
@@ -282,13 +293,20 @@ class ServeEngine:
                               "kv_cells": 0}
         self.step_idx = 0             # engine step counter (trace timeline)
         self.wave_count = 0           # admission waves (trace sub-batch ids)
+        # chaos state (repro.chaos): a degraded engine serves NPU-only
+        # (every route forced to the MU/GEMM path — the PIM side is out);
+        # a halted engine crashed and must never step or complete again.
+        self.degraded = False
+        self.halted = False
+        self.admission_rejects = 0    # arrivals bounced off a full queue
         self.recorder = recorder
         if recorder is not None:
             recorder.bind(self)
 
     # ---- request lifecycle ------------------------------------------------- #
     def add_request(self, prompt_tokens, max_new_tokens: int = 32,
-                    arrival_step: Optional[int] = None) -> int:
+                    arrival_step: Optional[int] = None,
+                    gid: Optional[int] = None) -> int:
         """Queue a request. ``arrival_step`` is the TRUE open-loop arrival
         tick when it differs from the current engine clock: a decode
         superstep advances ``step_idx`` k ticks inside one dispatch, so an
@@ -302,6 +320,12 @@ class ServeEngine:
         if len(prompt) > self.scfg.max_len - 1:
             raise ValueError(f"prompt ({len(prompt)} tokens) exceeds "
                              f"max_len-1 ({self.scfg.max_len - 1})")
+        if self.halted:
+            raise RuntimeError("engine is halted (crashed node)")
+        if 0 < self.scfg.queue_cap <= len(self.queue):
+            self.admission_rejects += 1
+            raise AdmissionRejected(
+                f"admission queue at capacity ({self.scfg.queue_cap})")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, prompt, max_new_tokens))
@@ -309,8 +333,46 @@ class ServeEngine:
             offset = 0 if arrival_step is None \
                 else max(self.step_idx - arrival_step, 0)
             self.recorder.on_request(self.step_idx, rid, len(prompt),
-                                     max_new_tokens, arrival_offset=offset)
+                                     max_new_tokens, arrival_offset=offset,
+                                     gid=gid)
         return rid
+
+    # ---- chaos hooks (repro.chaos) ----------------------------------------- #
+    def set_degraded(self, flag: bool) -> None:
+        """PIM-degraded mode: while set, every routing decision this engine
+        records (``phase_log_entry`` → pas_log, trace route dicts, and the
+        pim_aware overlap gate) is forced to the NPU/MU path — the node
+        keeps serving on normal memory accesses only, it just loses the
+        GEMV/PIM side of the crossover. Numerics are untouched: the route
+        is a mapping *record*, so greedy tokens stay identical."""
+        self.degraded = bool(flag)
+
+    def halt(self) -> None:
+        """Crash this engine: it must never dispatch, complete, or accept a
+        request again (the chaos replayer recovers its in-flight work onto
+        surviving nodes). Host state is left intact for post-mortem reads —
+        ``export_recovery_state`` still works on a halted engine."""
+        self.halted = True
+
+    def export_recovery_state(self) -> List[dict]:
+        """Per-request recovery state for every in-flight request (queued +
+        resident, completed ones excluded), from host state only: the
+        prompt, the remaining generation budget, and the tokens generated
+        so far — exactly what a surviving node needs to re-prefill
+        prompt+prefix and continue the greedy stream bit-identically."""
+        out = []
+        for req in self.queue:
+            out.append({"rid": req.rid, "prompt": req.prompt,
+                        "max_new": req.max_new_tokens,
+                        "generated": list(req.generated),
+                        "resident": False, "slot": None})
+        for slot, req in enumerate(self.slot_req):
+            if req is not None and not req.done:
+                out.append({"rid": req.rid, "prompt": req.prompt,
+                            "max_new": req.max_new_tokens,
+                            "generated": list(req.generated),
+                            "resident": True, "slot": slot})
+        return sorted(out, key=lambda d: d["rid"])
 
     def load_stats(self) -> Dict[str, int]:
         """Router hook (``repro.fleet``): the engine's instantaneous load,
@@ -448,9 +510,8 @@ class ServeEngine:
         self.prefill_stats["token_slots"] += B * C
         self.prefill_stats["valid_tokens"] += int(vc.sum())
         self.prefill_stats["kv_cells"] += B * (c * C + C)
-        entry = phase_log_entry(
-            "summarization", int(vc.sum()), len(job.wave),
-            self.cfg.d_model, self.cfg.d_ff)
+        entry = self._phase_entry("summarization", int(vc.sum()),
+                                  len(job.wave))
         self.pas_log.append(entry)
         if self.recorder is not None:
             self.recorder.on_prefill(
@@ -469,9 +530,7 @@ class ServeEngine:
         self.prefill_stats["valid_tokens"] += d.n_valid
         self.prefill_stats["kv_cells"] += d.rows * (d.prefix_span + C)
         slots = sorted({int(s) for s in d.seg_slot[d.valid]})
-        entry = phase_log_entry(
-            "summarization", d.n_valid, len(slots),
-            self.cfg.d_model, self.cfg.d_ff)
+        entry = self._phase_entry("summarization", d.n_valid, len(slots))
         self.pas_log.append(entry)
         if self.recorder is not None:
             self.recorder.on_prefill(
@@ -570,9 +629,7 @@ class ServeEngine:
                 self.prefill_stats["kv_cells"] += \
                     self.scfg.max_slots * (pos + 1)
             n_valid = max(len(req.prompt) - 1, 0)
-            entry = phase_log_entry(
-                "summarization", n_valid, len(wave),
-                self.cfg.d_model, self.cfg.d_ff)
+            entry = self._phase_entry("summarization", n_valid, len(wave))
             self.pas_log.append(entry)
             if self.recorder is not None and n_valid:
                 self.recorder.on_prefill(
@@ -591,9 +648,15 @@ class ServeEngine:
         active_np[ready] = True
         return active_np, len(ready)
 
+    def _phase_entry(self, phase: str, n_tokens: int, active: int) -> dict:
+        """Route record for one dispatch; a PIM-degraded engine forces the
+        NPU/MU path (``force_mu``) so its trace replays NPU-only."""
+        return phase_log_entry(phase, n_tokens, active,
+                               self.cfg.d_model, self.cfg.d_ff,
+                               force_mu=self.degraded)
+
     def _log_generation(self, n_tok: int) -> dict:
-        entry = phase_log_entry(
-            "generation", n_tok, n_tok, self.cfg.d_model, self.cfg.d_ff)
+        entry = self._phase_entry("generation", n_tok, n_tok)
         self.pas_log.append(entry)
         return entry
 
@@ -785,6 +848,9 @@ class ServeEngine:
 
     # ---- step: composition delegated to the scheduling policy --------------- #
     def step(self) -> List[Tuple[int, int]]:
+        if self.halted:
+            raise RuntimeError("engine is halted (crashed node); a crashed "
+                               "replica must never dispatch again")
         out = self.scheduler.step(self)
         self.step_idx += 1     # idle steps still advance the timeline
         return out             # (open-loop arrival processes need a clock)

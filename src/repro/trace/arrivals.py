@@ -27,6 +27,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serve.engine import AdmissionRejected
+
 
 @dataclass
 class ArrivalEvent:
@@ -161,24 +163,56 @@ def bursty_arrivals(rate: float, horizon: int, *, vocab: int,
 
 
 def drive(engine, arrivals: List[ArrivalEvent],
-          max_steps: int = 100_000) -> Dict[int, List[int]]:
+          max_steps: int = 100_000, *, backoff: int = 4,
+          return_stats: bool = False):
     """Open-loop serve: inject each arrival once the engine clock reaches
     its step (idle engine steps advance the clock), run until every arrival
-    has been served. Returns {rid: generated tokens}."""
+    has been served. Returns {rid: generated tokens}; with
+    ``return_stats=True`` returns ``(results, stats)`` where stats counts
+    admission rejections.
+
+    A bounded admission queue (``ServeConfig.queue_cap``) can reject an
+    arrival; the driver NEVER silently drops it — the arrival re-injects
+    after ``backoff`` ticks (doubling per attempt, capacity pressure is
+    not helped by hammering), keeping its TRUE arrival step so the
+    recorded ``arrival_offset`` carries the full admission wait into
+    TTFT/queue-wait metrics. Every arrival is eventually served: the
+    queue drains monotonically, so a finite workload always admits."""
     pending = sorted(arrivals, key=lambda a: a.step)
     results: Dict[int, List[int]] = {}
+    stats = {"rejected": 0}
+    retry: List[Tuple[int, int, ArrivalEvent]] = []   # (due, order, ev)
+    delay: Dict[int, int] = {}                        # order -> next delay
     i = 0
     for _ in range(max_steps):
-        while i < len(pending) and pending[i].step <= engine.step_idx:
+        now = engine.step_idx
+        due = sorted((r for r in retry if r[0] <= now),
+                     key=lambda r: (r[0], r[1]))
+        retry = [r for r in retry if r[0] > now]
+        for _, order, ev in due:
+            try:
+                engine.add_request(ev.prompt, ev.max_new,
+                                   arrival_step=ev.step)
+            except AdmissionRejected:
+                stats["rejected"] += 1
+                d = delay[order]
+                delay[order] = d * 2
+                retry.append((now + d, order, ev))
+        while i < len(pending) and pending[i].step <= now:
             # arrival_step records the TRUE arrival tick: when a superstep
             # advanced the clock past it, the injection is late and the
             # recorder keeps the sub-step offset (schema v5)
-            engine.add_request(pending[i].prompt, pending[i].max_new,
-                               arrival_step=pending[i].step)
+            try:
+                engine.add_request(pending[i].prompt, pending[i].max_new,
+                                   arrival_step=pending[i].step)
+            except AdmissionRejected:
+                stats["rejected"] += 1
+                delay[i] = backoff * 2
+                retry.append((now + backoff, i, pending[i]))
             i += 1
-        if i >= len(pending) and not engine.queue \
+        if i >= len(pending) and not retry and not engine.queue \
                 and all(r is None for r in engine.slot_req):
-            return results
+            return (results, stats) if return_stats else results
         for rid, tok in engine.step():
             results.setdefault(rid, []).append(tok)
     raise RuntimeError(f"workload did not drain in {max_steps} steps")

@@ -11,9 +11,16 @@ carries tokens, done flags and slot lengths in one transfer).
 it is recorded — ``repro.obs.MetricsHub`` is the canonical sink: attach
 ``TraceRecorder(sinks=[hub])`` and live metrics stay current step by step,
 at the same zero-dispatch/zero-sync cost as recording itself.
+
+``stream_path`` makes recording CRASH-SAFE: every line (header included) is
+appended to the file and flushed as it is recorded, so a replica killed
+mid-serve still leaves a loadable trace on disk — at worst the final line
+is torn, which ``Trace.loads`` tolerates (warn + drop). The in-memory
+events list and ``to_trace()`` are unaffected.
 """
 from __future__ import annotations
 
+import json
 from typing import Iterable, List, Optional, Tuple
 
 from repro.trace.schema import SCHEMA_VERSION, Trace
@@ -21,21 +28,47 @@ from repro.trace.schema import SCHEMA_VERSION, Trace
 
 class TraceRecorder:
     def __init__(self, sinks: Iterable = (), node_id: int = 0,
-                 fleet: Optional[dict] = None):
+                 fleet: Optional[dict] = None, chaos: Optional[dict] = None,
+                 stream_path=None):
         # node_id / fleet (schema v6): which replica this recorder serves
         # and the fleet shape it serves in ({"replicas": N, "routing": P});
-        # a standalone serve is node 0 of no fleet
+        # a standalone serve is node 0 of no fleet. chaos (schema v7): the
+        # serialized FaultPlan + recovery knobs of a chaos serve (null
+        # fault-free) — the full fault schedule ships in the header so a
+        # recorded chaos run replays bit-identically.
         self._engine = None
         self._header: Optional[dict] = None
         self.events: List[dict] = []
         self.sinks = list(sinks)
         self.node_id = int(node_id)
         self.fleet = dict(fleet) if fleet is not None else None
+        self.chaos = dict(chaos) if chaos is not None else None
+        self.stream_path = stream_path
+        self._stream = None
+        self._streamed_summary = False
+
+    def _stream_line(self, ev: dict) -> None:
+        if self._stream is not None:
+            self._stream.write(json.dumps(ev) + "\n")
+            self._stream.flush()     # crash-safe: at most one torn line
 
     def _emit(self, ev: dict) -> None:
         self.events.append(ev)
+        self._stream_line(ev)
         for s in self.sinks:
             s.observe(ev)
+
+    def close(self) -> None:
+        """Finish the JSONL stream (writes the summary line if the engine
+        is bound and it was not streamed yet)."""
+        if self._stream is None:
+            return
+        summary = self._summary()
+        if summary is not None and not self._streamed_summary:
+            self._stream_line(summary)
+            self._streamed_summary = True
+        self._stream.close()
+        self._stream = None
 
     # ---- engine attachment ------------------------------------------------ #
     def bind(self, engine) -> None:
@@ -46,6 +79,7 @@ class TraceRecorder:
         self._header = {
             "type": "header", "version": SCHEMA_VERSION,
             "node_id": self.node_id, "fleet": self.fleet,
+            "chaos": self.chaos,
             "arch": cfg.name, "family": cfg.family,
             "model": {
                 "num_layers": cfg.num_layers, "d_model": cfg.d_model,
@@ -69,19 +103,26 @@ class TraceRecorder:
                 "superstep": scfg.superstep,
             },
         }
+        if self.stream_path is not None and self._stream is None:
+            self._stream = open(self.stream_path, "w")
+        self._stream_line(self._header)
         for s in self.sinks:
             s.observe(self._header)
 
     # ---- engine hooks ------------------------------------------------------ #
     def on_request(self, step: int, rid: int, prompt_len: int,
-                   max_new: int, arrival_offset: int = 0) -> None:
+                   max_new: int, arrival_offset: int = 0,
+                   gid: Optional[int] = None) -> None:
         # arrival_offset (schema v5): ticks between the request's TRUE
         # open-loop arrival and the step the engine first saw it — nonzero
         # when a superstep's k inner rounds advanced the clock past the
-        # arrival before the driver could inject it
+        # arrival before the driver could inject it.
+        # gid (schema v7): the request's fleet-global id — stable across a
+        # failover re-prefill on another node, where the local rid changes.
         self._emit({"type": "request", "step": step, "rid": rid,
                     "prompt_len": prompt_len, "max_new": max_new,
-                    "arrival_offset": arrival_offset})
+                    "arrival_offset": arrival_offset,
+                    "gid": rid if gid is None else int(gid)})
 
     def on_admit(self, step: int,
                  wave: List[Tuple[int, int, int]]) -> None:
@@ -122,6 +163,36 @@ class TraceRecorder:
                     n_generated: int) -> None:
         self._emit({"type": "complete", "step": step, "rid": rid,
                     "reason": reason, "n_generated": n_generated})
+
+    # ---- chaos hooks (schema v7, emitted by repro.chaos) ------------------- #
+    def on_fault(self, step: int, kind: str, phase: str, **extra) -> None:
+        # phase: "begin" for instantaneous faults and window starts, "end"
+        # for window ends (end events carry ``since`` = the begin tick)
+        ev = {"type": "fault", "step": step, "kind": kind, "phase": phase}
+        ev.update(extra)
+        self._emit(ev)
+
+    def on_recover(self, step: int, gid: int, rid: int, from_node: int,
+                   crash_step: int, prefix_tokens: int,
+                   reprefill_tokens: int, retry: int) -> None:
+        # failover landed HERE: global request ``gid`` (local rid ``rid``)
+        # re-prefilled prompt+prefix after node ``from_node`` crashed
+        self._emit({"type": "recover", "step": step, "gid": gid, "rid": rid,
+                    "from_node": from_node, "crash_step": crash_step,
+                    "prefix_tokens": prefix_tokens,
+                    "reprefill_tokens": reprefill_tokens, "retry": retry})
+
+    def on_failed(self, step: int, gid: int, reason: str,
+                  retries: int) -> None:
+        # terminal: the retry budget is exhausted — recorded, never dropped
+        self._emit({"type": "failed", "step": step, "gid": gid,
+                    "reason": reason, "retries": retries})
+
+    def on_reject(self, step: int, gid: int, reason: str,
+                  retries: int) -> None:
+        # terminal admission rejection (queue_reject fault / capacity)
+        self._emit({"type": "reject", "step": step, "gid": gid,
+                    "reason": reason, "retries": retries})
 
     # ---- export ------------------------------------------------------------ #
     def _summary(self) -> Optional[dict]:

@@ -83,17 +83,42 @@ Version history:
        different nodes of one serve merge on a common timebase. Loading a
        v1-v5 trace upgrades in place: node_id=0, fleet=None (a single-node
        serve is a one-replica fleet).
+  v7 — chaos-tolerant fleet serving (repro.chaos): the header gains
+       ``chaos`` (null for a fault-free serve, else the serialized
+       ``FaultPlan`` + recovery knobs — the full fault schedule ships in
+       the trace, so a recorded chaos run replays bit-identically);
+       ``request`` events gain ``gid``, the GLOBAL arrival id (rids are
+       per-engine, so cross-replica exactly-once accounting needs a fleet-
+       wide identity; a standalone serve records gid == rid). Four new
+       event types carry the fault/recovery timeline:
+         {"type": "fault",   "step", "kind", "phase", ...}   — a fault
+             transition on this node (kind in node_crash / pim_degraded /
+             slow_node / queue_reject; phase "start"|"end"; window ends
+             carry "since" (the start fleet tick) and window parameters;
+             every event also carries "fleet_step", the global tick)
+         {"type": "recover", "step", "gid", "rid", "from_node",
+             "crash_step", "prefix_tokens", "reprefill_tokens", "retry"}
+             — this node picked up a crashed node's in-flight request:
+             re-prefill of prompt + prefix_tokens generated-so-far tokens
+             (reprefill_tokens = the full re-prefilled sequence length)
+         {"type": "failed",  "step", "gid", "reason", "retries"} — the
+             request exceeded its recovery retry budget; terminal
+         {"type": "reject",  "step", "gid", "reason", "retries"} — the
+             request exceeded its admission retry budget; terminal
+       Loading a v1-v6 trace upgrades in place: chaos=None, gid=rid (a
+       fault-free standalone serve).
 """
 from __future__ import annotations
 
 import json
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 
-SCHEMA_VERSION = 6
-SUPPORTED_VERSIONS = (1, 2, 3, 4, 5, 6)
+SCHEMA_VERSION = 7
+SUPPORTED_VERSIONS = (1, 2, 3, 4, 5, 6, 7)
 
 # required keys per event type (beyond "type")
 _REQUIRED: Dict[str, tuple] = {
@@ -104,6 +129,12 @@ _REQUIRED: Dict[str, tuple] = {
     "decode": ("step", "occupancy", "slot_lens", "slots", "tokens", "route"),
     "complete": ("step", "rid", "reason", "n_generated"),
     "summary": ("dispatch_counts", "host_syncs", "prefill_stats"),
+    # chaos events (v7): fault transitions + failover recovery records
+    "fault": ("step", "kind", "phase"),
+    "recover": ("step", "gid", "rid", "from_node", "crash_step",
+                "prefix_tokens", "reprefill_tokens", "retry"),
+    "failed": ("step", "gid", "reason", "retries"),
+    "reject": ("step", "gid", "reason", "retries"),
 }
 # additional keys required from v2 / v3 on
 _REQUIRED_V2: Dict[str, tuple] = {
@@ -126,6 +157,12 @@ _REQUIRED_V5: Dict[str, tuple] = {
 # recorded the trace, and the fleet shape it served in — null standalone)
 _REQUIRED_V6: Dict[str, tuple] = {
     "header": ("node_id", "fleet"),
+}
+# additional keys required from v7 on: the serialized fault plan (null
+# fault-free) and the global arrival id on every request event
+_REQUIRED_V7: Dict[str, tuple] = {
+    "header": ("chaos",),
+    "request": ("gid",),
 }
 _MODEL_KEYS = ("num_layers", "d_model", "num_heads", "num_kv_heads",
                "head_dim", "d_ff", "vocab_size")
@@ -160,6 +197,8 @@ def validate_event(ev: dict, version: int = SCHEMA_VERSION) -> dict:
         required = required + _REQUIRED_V5.get(t, ())
     if version >= 6:
         required = required + _REQUIRED_V6.get(t, ())
+    if version >= 7:
+        required = required + _REQUIRED_V7.get(t, ())
     missing = [k for k in required if k not in ev]
     if missing:
         raise TraceSchemaError(f"{t} event missing keys {missing}: {ev!r}")
@@ -228,6 +267,12 @@ def upgrade_event(ev: dict, version: int) -> dict:
         if ev["type"] == "header":
             ev.setdefault("node_id", 0)
             ev.setdefault("fleet", None)
+    if version < 7:
+        # pre-chaos semantics: fault-free serve, request identity is local
+        if ev["type"] == "header":
+            ev.setdefault("chaos", None)
+        elif ev["type"] == "request":
+            ev.setdefault("gid", ev["rid"])
     return ev
 
 
@@ -285,16 +330,28 @@ class Trace:
             f.write(self.dumps())
 
     @classmethod
-    def loads(cls, text: str) -> "Trace":
+    def loads(cls, text: str, *,
+              tolerate_truncation: bool = False) -> "Trace":
         header, events, summary = None, [], None
         version = SCHEMA_VERSION
-        for ln, line in enumerate(text.splitlines(), 1):
+        lines = text.splitlines()
+        last_ln = max((i for i, ln in enumerate(lines, 1) if ln.strip()),
+                      default=0)
+        for ln, line in enumerate(lines, 1):
             line = line.strip()
             if not line:
                 continue
             try:
                 ev = json.loads(line)
             except json.JSONDecodeError as e:
+                if tolerate_truncation and ln == last_ln:
+                    # a replica killed mid-write leaves one torn final line
+                    # (the recorder streams line-buffered JSONL): drop it
+                    # with a warning so the surviving prefix stays lint-able
+                    warnings.warn(
+                        f"trace line {ln}: dropping truncated final line "
+                        f"({e})", RuntimeWarning, stacklevel=2)
+                    break
                 raise TraceSchemaError(f"line {ln}: bad JSON ({e})") from e
             if isinstance(ev, dict) and ev.get("type") == "header":
                 # validate the header against its own declared version
@@ -322,6 +379,10 @@ class Trace:
         return cls(header=header, events=events, summary=summary)
 
     @classmethod
-    def load(cls, path) -> "Trace":
+    def load(cls, path, *, tolerate_truncation: bool = True) -> "Trace":
+        # files are where crashes tear lines (the chaos recorders stream
+        # line-buffered JSONL): a torn FINAL line loads as a warning +
+        # drop by default; in-memory strings (loads) stay strict
         with open(path) as f:
-            return cls.loads(f.read())
+            return cls.loads(f.read(),
+                             tolerate_truncation=tolerate_truncation)

@@ -1,7 +1,7 @@
 """repro.verify — static hazard analysis for PAS command DAGs and the
 serving protocol (the correctness gate CI runs over every shipped trace).
 
-Four passes, none of which execute anything:
+Five passes, none of which execute anything:
 
   footprints  per-Command read/write resource sets, derived from command
               kind/unit/shape metadata and naming conventions — never from
@@ -15,10 +15,14 @@ Four passes, none of which execute anything:
               supersteps, fused-pair issue roots, dispatch accounting
   lint        AST scan of repro.{serve,sched} for host-sync calls outside
               an explicit allowlist
+  exactly_once  chaos-recovery audit over a fleet's traces: no activity
+              after a crash, no duplicate completions across replicas,
+              every arrival accounted completed / failed / rejected
 
 CLI: ``python -m repro.launch.verify --traces benchmarks/data
 --src src/repro`` (see README "Static verification").
 """
+from repro.verify.exactly_once import check_exactly_once
 from repro.verify.footprints import (Footprint, Resource, bank_set,
                                      command_footprints)
 from repro.verify.hazards import (Finding, SEVERITIES, analyze_commands,
@@ -33,5 +37,5 @@ __all__ = [
     "Finding", "SEVERITIES", "analyze_commands", "analyze_lowered",
     "diff_commands", "reference_commands", "verify_lowered_step",
     "SYNC_ATTRS", "SYNC_NAMES", "lint_host_syncs", "load_allowlist",
-    "lint_trace",
+    "lint_trace", "check_exactly_once",
 ]

@@ -1,0 +1,431 @@
+"""Chaos-tolerant fleet serving: deterministic fault injection, failover
+re-prefill recovery, exactly-once accounting, graceful PIM degradation,
+crash-safe trace streaming, and the schema-v7 round trip."""
+import json
+import os
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.chaos import (FAULT_KINDS, FaultEvent, FaultPlan, FleetHealth,
+                         inflight_from_events, serve_fleet_chaos)
+from repro.configs import get_arch
+from repro.fleet import FleetMetrics, make_router, serve_fleet
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.obs import MetricsHub
+from repro.serve import AdmissionRejected, ServeConfig, ServeEngine
+from repro.trace import TraceRecorder, drive
+from repro.trace.arrivals import bursty_arrivals
+from repro.trace.schema import (SCHEMA_VERSION, Trace, upgrade_event,
+                                validate_event)
+from repro.verify import check_exactly_once
+
+KEY = jax.random.PRNGKey(0)
+FULL_DIMS = (2048, 8192)
+REPLICAS = 3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_params(T.param_defs(cfg), KEY)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def arrivals(setup):
+    cfg, _ = setup
+    return bursty_arrivals(1.0, 24, vocab=cfg.vocab_size, burst=6, idle=6,
+                           prompt_len=(2, 40), max_new=(3, 8), seed=3)
+
+
+def _scfg(**kw):
+    base = dict(max_slots=4, max_len=64, prefill_chunk=8,
+                policy="pim_aware", pack=True, fuse=True, superstep=4,
+                map_dims=FULL_DIMS)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+CRASH_PLAN = FaultPlan(events=[
+    FaultEvent("node_crash", 1, 8),
+    FaultEvent("pim_degraded", 0, 4, until=20),
+])
+
+
+@pytest.fixture(scope="module")
+def faultfree(setup, arrivals):
+    cfg, params = setup
+    return serve_fleet(cfg, params, _scfg(), arrivals, replicas=REPLICAS,
+                      routing="least_loaded")
+
+
+@pytest.fixture(scope="module")
+def chaos(setup, arrivals, tmp_path_factory):
+    cfg, params = setup
+    d = tmp_path_factory.mktemp("chaos_stream")
+    res = serve_fleet_chaos(cfg, params, _scfg(), arrivals, CRASH_PLAN,
+                            replicas=REPLICAS, routing="least_loaded",
+                            stream_dir=str(d))
+    return res, d
+
+
+# --------------------------------------------------------------------------- #
+# FaultPlan: construction, serialization, determinism
+# --------------------------------------------------------------------------- #
+def test_fault_plan_round_trip_and_spec():
+    plan = FaultPlan.from_spec(
+        "node_crash,node=1,step=12;pim_degraded,node=0,step=8,until=20;"
+        "slow_node,node=2,step=5,until=9,factor=3;"
+        "queue_reject,node=0,step=30,until=34,cap=2")
+    assert [e.kind for e in plan.events] == \
+        ["slow_node", "pim_degraded", "node_crash", "queue_reject"]
+    assert FaultPlan.from_dict(plan.to_dict()).to_dict() == plan.to_dict()
+    assert json.loads(json.dumps(plan.to_dict())) == plan.to_dict()
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultEvent("node_crash", 0, 5, until=9)       # crash has no window
+    with pytest.raises(ValueError):
+        FaultEvent("pim_degraded", 0, 5)              # window needs until
+    with pytest.raises(ValueError):
+        FaultEvent("no_such_fault", 0, 5)
+    plan = FaultPlan(events=[FaultEvent("node_crash", 3, 1)])
+    with pytest.raises(ValueError):
+        plan.validate(2)                              # node out of range
+    with pytest.raises(ValueError):                   # whole fleet crashes
+        FaultPlan(events=[FaultEvent("node_crash", 0, 1)]).validate(1)
+
+
+def test_fault_plan_generate_is_seed_deterministic():
+    a = FaultPlan.generate(11, 3, 48)
+    b = FaultPlan.generate(11, 3, 48)
+    assert a.to_dict() == b.to_dict()
+    assert a.to_dict() != FaultPlan.generate(12, 3, 48).to_dict()
+    a.validate(3)
+    assert sum(e.kind == "node_crash" for e in a.events) <= 1
+
+
+# --------------------------------------------------------------------------- #
+# health-aware routing
+# --------------------------------------------------------------------------- #
+class _FakeEngine:
+    def __init__(self, queued=0, busy=0):
+        self._q, self._b = queued, busy
+
+    def load_stats(self):
+        return {"queued": self._q, "busy": self._b, "ready": 0, "free": 4}
+
+
+def test_routers_skip_crashed_nodes():
+    prompt = np.arange(10, dtype=np.int32)
+    engines = [_FakeEngine() for _ in range(3)]
+    health = FleetHealth(3)
+    health.begin(FaultEvent("node_crash", 1, 0))
+    for policy in ("round_robin", "least_loaded", "prefix_affinity"):
+        r = make_router(policy, 3)
+        picks = {r.route(prompt, engines, health=health)
+                 for _ in range(6)}
+        assert 1 not in picks, policy
+    # no alive replicas is a hard error, not a silent misroute
+    for n in (0, 2):
+        health.begin(FaultEvent("node_crash", n, 0))
+    with pytest.raises(RuntimeError):
+        make_router("round_robin", 3).route(prompt, engines, health=health)
+
+
+def test_least_loaded_penalizes_degraded_and_slow():
+    prompt = np.arange(4, dtype=np.int32)
+    engines = [_FakeEngine(queued=1), _FakeEngine(queued=0)]
+    health = FleetHealth(2)
+    # node 1 is empty but degraded: penalty 2.0 outweighs node 0's queue
+    health.begin(FaultEvent("pim_degraded", 1, 0, until=10))
+    assert make_router("least_loaded", 2).route(
+        prompt, engines, health=health) == 0
+    health.end(FaultEvent("pim_degraded", 1, 0, until=10))
+    assert make_router("least_loaded", 2).route(
+        prompt, engines, health=health) == 1
+
+
+def test_health_none_reproduces_pre_chaos_routing(faultfree, setup,
+                                                  arrivals):
+    """The fault-free chaos driver routes exactly like serve_fleet."""
+    cfg, params = setup
+    res = serve_fleet_chaos(cfg, params, _scfg(), arrivals, FaultPlan(),
+                            replicas=REPLICAS, routing="least_loaded")
+    assert res.assignments == faultfree.assignments
+    assert res.tokens_by_gid() == faultfree.tokens_by_gid()
+
+
+# --------------------------------------------------------------------------- #
+# crash failover: exactly-once, token identity, determinism
+# --------------------------------------------------------------------------- #
+def test_crash_recovery_tokens_identical_to_fault_free(chaos, faultfree,
+                                                       arrivals):
+    res, _ = chaos
+    assert not res.failed and not res.rejected
+    ref = faultfree.tokens_by_gid()
+    got = res.tokens_by_gid()
+    assert set(got) == set(range(len(arrivals)))
+    for gid, toks in got.items():
+        assert toks == ref[gid], gid
+    assert res.recoveries, "the crash had in-flight work to fail over"
+    for r in res.recoveries:
+        assert r["from_node"] == 1 and r["crash_step"] == 8
+        assert r["node"] != 1
+
+
+def test_chaos_replay_is_bit_deterministic(chaos, setup, arrivals):
+    res, _ = chaos
+    again = serve_fleet_chaos(*setup, _scfg(), arrivals, CRASH_PLAN,
+                              replicas=REPLICAS, routing="least_loaded")
+    assert again.assignments == res.assignments
+    assert again.recoveries == res.recoveries
+    assert again.tokens_by_gid() == res.tokens_by_gid()
+    for n in res.traces:
+        assert again.traces[n].events == res.traces[n].events
+
+
+def test_exactly_once_pass_on_chaos_traces(chaos):
+    res, _ = chaos
+    assert check_exactly_once(list(res.traces.values())) == []
+    # the crashed node's stream ends at its crash fault event
+    ev = res.traces[1].events
+    assert ev[-1]["type"] == "fault" and ev[-1]["kind"] == "node_crash"
+
+
+def test_exactly_once_catches_violations(chaos):
+    res, _ = chaos
+    traces = {n: Trace(header=dict(t.header), events=[dict(e)
+              for e in t.events], summary=t.summary)
+              for n, t in res.traces.items()}
+    # duplicate completion: replay node 0's first complete onto node 2
+    comp = next(e for e in traces[0].events if e["type"] == "complete")
+    req = next(e for e in traces[0].events
+               if e["type"] == "request" and e["rid"] == comp["rid"])
+    traces[2].events.extend([dict(req), dict(comp)])
+    klasses = {f.klass for f in check_exactly_once(list(traces.values()))}
+    assert "duplicate_completion" in klasses
+    # post-crash activity: any event after the crash fault
+    t1 = res.traces[1]
+    bad = Trace(header=dict(t1.header),
+                events=list(t1.events) + [{"type": "decode", "step": 99,
+                                           "occupancy": 1, "slot_lens": [1],
+                                           "slots": [0],
+                                           "tokens": [[0, 5]],
+                                           "route": {}}],
+                summary=t1.summary)
+    klasses = {f.klass for f in check_exactly_once([bad])}
+    assert "post_crash_activity" in klasses
+    # silent drop: a request event with no terminal state anywhere
+    t0 = res.traces[0]
+    dropped = Trace(header=dict(t0.header),
+                    events=list(t0.events) + [{"type": "request",
+                                               "step": 0, "rid": 999,
+                                               "prompt_len": 4,
+                                               "max_new": 4,
+                                               "arrival_offset": 0,
+                                               "gid": 999}],
+                    summary=t0.summary)
+    klasses = {f.klass for f in check_exactly_once([dropped])}
+    assert "unaccounted_request" in klasses
+
+
+def test_inflight_from_events_matches_engine_state(setup):
+    cfg, params = setup
+    hub = MetricsHub()
+    rec = TraceRecorder(sinks=[hub])
+    eng = ServeEngine(cfg, params, _scfg(), recorder=rec)
+    rng = np.random.default_rng(5)
+    for _ in range(4):
+        eng.add_request(rng.integers(0, cfg.vocab_size, 6), 6)
+    for _ in range(6):
+        eng.step()
+    view = inflight_from_events(rec.events)
+    state = eng.export_recovery_state()
+    assert {d["rid"]: list(d["generated"]) for d in state} == \
+        {rid: view[rid] for rid in (d["rid"] for d in state)}
+
+
+# --------------------------------------------------------------------------- #
+# graceful degradation + straggler + admission faults
+# --------------------------------------------------------------------------- #
+def test_pim_degraded_forces_mu_routing(chaos):
+    res, _ = chaos
+    log = res.engines[0].scheduler.decision_log
+    in_window = [d for d in log if 4 <= d["step"] < 20]
+    out_window = [d for d in log if not 4 <= d["step"] < 20]
+    assert in_window, "decisions were made inside the degraded window"
+    for d in in_window:
+        assert d["degraded"] and not d["overlap"]
+        assert d["prefill_route"] == d["decode_route"] == "gemm"
+    for d in out_window:
+        assert not d["degraded"]
+
+
+def test_degraded_window_does_not_change_tokens(setup, arrivals, faultfree):
+    cfg, params = setup
+    plan = FaultPlan(events=[FaultEvent("pim_degraded", 0, 2, until=40),
+                             FaultEvent("pim_degraded", 2, 2, until=40)])
+    res = serve_fleet_chaos(cfg, params, _scfg(), arrivals, plan,
+                            replicas=REPLICAS, routing="least_loaded")
+    assert res.tokens_by_gid() == faultfree.tokens_by_gid()
+
+
+def test_slow_node_serves_fewer_ticks(setup, arrivals):
+    cfg, params = setup
+    plan = FaultPlan(events=[FaultEvent("slow_node", 0, 0, until=30,
+                                        factor=3)])
+    res = serve_fleet_chaos(cfg, params, _scfg(), arrivals, plan,
+                            replicas=2, routing="round_robin")
+    base = serve_fleet_chaos(cfg, params, _scfg(), arrivals, FaultPlan(),
+                             replicas=2, routing="round_robin")
+    # straggling only delays scheduling; greedy tokens are untouched
+    assert sorted(map(tuple, res.tokens_by_gid().values())) == \
+        sorted(map(tuple, base.tokens_by_gid().values()))
+    slow_steps = [e["step"] for e in res.traces[0].events
+                  if e["type"] == "decode" and e["step"] < 30]
+    base_steps = [e["step"] for e in base.traces[0].events
+                  if e["type"] == "decode" and e["step"] < 30]
+    assert len(slow_steps) < len(base_steps)
+
+
+def test_queue_reject_budget_exhaustion_is_recorded(setup, arrivals):
+    """Admission faults either retry to success or end terminal reject —
+    every arrival is accounted, none silently dropped."""
+    cfg, params = setup
+    plan = FaultPlan(events=[
+        FaultEvent("queue_reject", n, 0, until=60, cap=0)
+        for n in range(REPLICAS)])
+    res = serve_fleet_chaos(cfg, params, _scfg(), arrivals, plan,
+                            replicas=REPLICAS, routing="least_loaded",
+                            retry_budget=2, backoff=1)
+    assert set(res.rejected) == set(range(len(arrivals)))
+    assert all(r == "retry_budget" for r in res.rejected.values())
+    assert check_exactly_once(list(res.traces.values())) == []
+    fm = FleetMetrics.from_traces(res.traces)
+    c = fm.chaos_summary()
+    assert c["goodput"] == 0.0
+    assert c["offered"] == len(arrivals)
+
+
+# --------------------------------------------------------------------------- #
+# metrics rollup
+# --------------------------------------------------------------------------- #
+def test_chaos_metrics_rollup_live_offline_parity(chaos, arrivals):
+    res, _ = chaos
+    live = FleetMetrics()
+    for n, h in res.hubs.items():
+        live.add(n, h)
+    offline = FleetMetrics.from_traces(res.traces)
+    c_live, c_off = live.chaos_summary(), offline.chaos_summary()
+    assert c_live == c_off
+    assert c_live["goodput"] == 1.0
+    assert c_live["completed"] == c_live["offered"] == len(arrivals)
+    assert c_live["duplicate_completions"] == []
+    assert c_live["recovered"] == len(res.recoveries)
+    assert c_live["reprefill_tokens"] == \
+        sum(r["reprefill_tokens"] for r in res.recoveries)
+    assert c_live["mttr_ticks"]["node_crash"]["count"] == \
+        len(res.recoveries)
+    assert c_live["faults"] == {"node_crash": 1, "pim_degraded": 1}
+    assert live.summary()["chaos"] == c_live
+
+
+def test_fault_free_fleet_has_no_chaos_section(faultfree):
+    fm = FleetMetrics()
+    for n, h in faultfree.hubs.items():
+        fm.add(n, h)
+    assert fm.chaos_summary() is None
+    assert fm.summary()["chaos"] is None
+
+
+# --------------------------------------------------------------------------- #
+# schema v7 + crash-safe streaming
+# --------------------------------------------------------------------------- #
+def test_schema_v7_chaos_events_validate(chaos):
+    res, _ = chaos
+    for tr in res.traces.values():
+        assert tr.header["version"] == SCHEMA_VERSION >= 7
+        assert tr.header["chaos"]["plan"] == CRASH_PLAN.to_dict()
+        tr.validate()
+        assert Trace.loads(tr.dumps()).events == tr.events
+
+
+def test_chaos_plan_replays_from_recorded_header(chaos, setup, arrivals):
+    """The trace header alone reproduces the chaos run: deserialize the
+    plan + knobs from a recorded trace and replay bit-identically."""
+    res, _ = chaos
+    hdr = json.loads(json.dumps(res.traces[0].header["chaos"]))
+    plan = FaultPlan.from_dict(hdr["plan"])
+    again = serve_fleet_chaos(*setup, _scfg(), arrivals, plan,
+                              replicas=REPLICAS, routing="least_loaded",
+                              retry_budget=hdr["retry_budget"],
+                              backoff=hdr["backoff"])
+    assert again.tokens_by_gid() == res.tokens_by_gid()
+    for n in res.traces:
+        assert again.traces[n].events == res.traces[n].events
+
+
+def test_upgrade_v6_events_to_v7():
+    req = {"type": "request", "step": 3, "rid": 5, "prompt_len": 4,
+           "max_new": 8, "arrival_offset": 0}
+    up = upgrade_event(dict(req), 6)
+    assert up["gid"] == 5
+    validate_event(up, SCHEMA_VERSION)
+    hdr = {"type": "header", "version": 6, "node_id": 0, "fleet": None}
+    assert upgrade_event(dict(hdr), 6)["chaos"] is None
+
+
+def test_streamed_traces_match_in_memory_and_tolerate_truncation(chaos):
+    res, d = chaos
+    for n, tr in res.traces.items():
+        disk = Trace.load(os.path.join(str(d), f"node{n}.jsonl"))
+        assert disk.events == tr.events
+        assert disk.summary == tr.summary
+    # tear the final line: load warns and drops it, keeps the rest
+    path = os.path.join(str(d), "node0.jsonl")
+    raw = open(path).read()
+    torn = path + ".torn"
+    with open(torn, "w") as f:
+        f.write(raw[:-15])
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        tr = Trace.load(torn)
+    assert any("truncated" in str(x.message) for x in w)
+    assert len(tr.events) == len(res.traces[0].events) - 1 or \
+        tr.summary is None
+
+
+# --------------------------------------------------------------------------- #
+# bounded admission queue + driver re-injection (solo engine)
+# --------------------------------------------------------------------------- #
+def test_drive_reinjects_rejected_arrivals(setup, arrivals):
+    cfg, params = setup
+    ref = drive(ServeEngine(cfg, params, _scfg()), arrivals)
+    eng = ServeEngine(cfg, params, _scfg(queue_cap=2))
+    res, stats = drive(eng, arrivals, return_stats=True)
+    assert stats["rejected"] > 0
+    assert stats["rejected"] == eng.admission_rejects
+    assert len(res) == len(arrivals)              # nothing dropped
+    assert sorted(map(tuple, res.values())) == \
+        sorted(map(tuple, ref.values()))          # same greedy tokens
+
+
+def test_queue_cap_rejects_and_halted_engine_refuses(setup):
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, _scfg(queue_cap=1))
+    eng.add_request(np.arange(4, dtype=np.int32), 4)
+    with pytest.raises(AdmissionRejected):
+        eng.add_request(np.arange(4, dtype=np.int32), 4)
+    assert eng.admission_rejects == 1
+    eng2 = ServeEngine(cfg, params, _scfg())
+    eng2.halt()
+    with pytest.raises(RuntimeError):
+        eng2.add_request(np.arange(4, dtype=np.int32), 4)
+    with pytest.raises(RuntimeError):
+        eng2.step()

@@ -180,7 +180,7 @@ def test_schema_v5_requires_and_upgrades_arrival_offset():
     for old in (1, 2, 3, 4):
         up = upgrade_event(dict(ev), old)
         assert up["arrival_offset"] == 0
-    ok = dict(ev, arrival_offset=2)
+    ok = dict(ev, arrival_offset=2, gid=0)   # gid is the v7 requirement
     assert validate_event(dict(ok), SCHEMA_VERSION) == ok
 
 
