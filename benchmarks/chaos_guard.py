@@ -1,33 +1,42 @@
 """Chaos serving CI guard: fault injection must not change the answer.
 
 Serves ONE bursty open-loop arrival stream through a 3-replica fleet
-twice — fault-free (``serve_fleet``) and under the committed chaos plan
-(``data/chaos_plan.json``: a mid-burst node crash plus a PIM-degraded
-window) via ``repro.chaos.serve_fleet_chaos`` — and holds the recovery
-path to its guarantees:
+three times — fault-free (``serve_fleet``), under the committed chaos
+plan (``data/chaos_plan.json``: a mid-burst node crash plus a
+PIM-degraded window) via ``repro.chaos.serve_fleet_chaos``, and under
+the SAME plan with incremental KV snapshots on (mirrored every
+``SNAPSHOT["snapshot_interval"]`` ticks) — and holds the recovery path
+to its guarantees:
 
     PYTHONPATH=src python benchmarks/chaos_guard.py            # check
     PYTHONPATH=src python benchmarks/chaos_guard.py --record   # rebase
 
-Four gates, all CI-fatal and all checked on every run (--record included
+Five gates, all CI-fatal and all checked on every run (--record included
 — a baseline must never be recorded with a broken invariant):
 
-  * TOKEN IDENTITY: every request's generated tokens under chaos must be
-    byte-identical to the fault-free run — failover re-prefill recovery
-    is only recovery if the answer does not change;
+  * TOKEN IDENTITY: every request's generated tokens under chaos — with
+    AND without snapshots — must be byte-identical to the fault-free run
+    — failover re-prefill recovery is only recovery if the answer does
+    not change;
   * GOODPUT 1.0: the plan leaves survivors with capacity, so every
     offered request must complete (nothing failed, rejected, or dropped);
-  * EXACTLY-ONCE: ``repro.verify.check_exactly_once`` over the per-node
-    chaos traces must report zero findings;
+  * EXACTLY-ONCE + SNAPSHOT PROVENANCE: ``check_exactly_once`` and
+    ``check_snapshot_provenance`` over both runs' per-node traces must
+    report zero findings;
+  * SNAPSHOTS SAVE WORK: the snapshot run's paid re-prefill tokens must
+    be STRICTLY below the from-zero run's — and saved + paid must equal
+    the from-zero cost exactly, recovery by recovery;
   * determinism vs the committed ``data/chaos_baseline.json``: recovery
-    counts, re-prefill overhead, MTTR, and per-class fault counts are
-    exact-match (the chaos clock is seeded and tick-deterministic, so ANY
-    drift is a replay break, not noise).
+    counts, re-prefill overhead, snapshot export/restore volume, MTTR,
+    and per-class fault counts are exact-match (the chaos clock is
+    seeded and tick-deterministic, so ANY drift is a replay break, not
+    noise).
 
 ``--record`` also refreshes the committed per-node chaos traces
-(``data/chaos_node{N}.jsonl``) so ``python -m repro.launch.verify
---traces benchmarks/data`` exercises the exactly-once pass on a real
-crash trace in CI.
+(``data/chaos_node{N}.jsonl`` from-zero, ``data/chaos_snap_node{N}.jsonl``
+snapshot-enabled) so ``python -m repro.launch.verify --traces
+benchmarks/data`` exercises the exactly-once AND snapshot-provenance
+passes on real crash traces in CI.
 """
 from __future__ import annotations
 
@@ -49,7 +58,8 @@ from repro.models import transformer as T  # noqa: E402
 from repro.models.params import init_params  # noqa: E402
 from repro.serve import ServeConfig  # noqa: E402
 from repro.trace.arrivals import bursty_arrivals  # noqa: E402
-from repro.verify import check_exactly_once  # noqa: E402
+from repro.verify import (check_exactly_once,  # noqa: E402
+                          check_snapshot_provenance)
 
 DATA_DIR = os.path.join(os.path.dirname(__file__), "data")
 DEFAULT_BASELINE = os.path.join(DATA_DIR, "chaos_baseline.json")
@@ -69,8 +79,16 @@ WORKLOAD = dict(rate=1.0, horizon=48, burst=8, idle=8,
 GUARDED = ("goodput", "completed", "offered", "recovered",
            "reprefill_tokens", "crash_inflight")
 
+# the snapshot-enabled leg of the guard: mirror-to-ring-peer every 4
+# fleet ticks (no disk — CI guards the delta/merge/restore protocol, the
+# atomic-save round trip has its own unit coverage)
+SNAPSHOT = dict(snapshot_interval=4, snapshot_mirror=True)
+# exact-match guarded snapshot metrics (from MetricsHub.snapshot_summary)
+GUARDED_SNAP = ("events", "bytes", "rows", "restores", "saved_tokens",
+                "paid_tokens")
 
-def run_pair(plan):
+
+def run_triple(plan):
     cfg = get_arch("llama3.2-1b").reduced()
     params = init_params(T.param_defs(cfg), jax.random.PRNGKey(0))
     arrivals = bursty_arrivals(WORKLOAD["rate"], WORKLOAD["horizon"],
@@ -84,13 +102,17 @@ def run_pair(plan):
                       replicas=REPLICAS, routing=ROUTING)
     chaos = serve_fleet_chaos(cfg, params, ServeConfig(**SERVE), arrivals,
                               plan, replicas=REPLICAS, routing=ROUTING)
-    return ref, chaos, arrivals
+    snap = serve_fleet_chaos(cfg, params, ServeConfig(**SERVE), arrivals,
+                             plan, replicas=REPLICAS, routing=ROUTING,
+                             **SNAPSHOT)
+    return ref, chaos, snap, arrivals
 
 
 def collect(plan):
-    ref, chaos, arrivals = run_pair(plan)
+    ref, chaos, snap, arrivals = run_triple(plan)
     fm = FleetMetrics.from_traces(chaos.traces)
     c = fm.chaos_summary()
+    sc = FleetMetrics.from_traces(snap.traces).chaos_summary()
     cur = {
         "workload": {
             "workload": {k: list(v) if isinstance(v, tuple) else v
@@ -99,6 +121,7 @@ def collect(plan):
                       for k, v in SERVE.items()},
             "replicas": REPLICAS, "routing": ROUTING,
             "plan": plan.to_dict(),
+            "snapshot": dict(SNAPSHOT),
         },
         "chaos": {k: c[k] for k in GUARDED},
         "mttr_ticks": c["mttr_ticks"],
@@ -106,31 +129,61 @@ def collect(plan):
         "recoveries": len(chaos.recoveries),
         "failed": sorted(chaos.failed),
         "rejected": sorted(chaos.rejected),
+        "snapshots": {
+            **{k: sc["snapshots"][k] for k in GUARDED_SNAP},
+            "reprefill_tokens": sc["reprefill_tokens"],
+            "recoveries": len(snap.recoveries),
+        },
     }
-    return cur, ref, chaos, arrivals
+    return cur, ref, chaos, snap, arrivals
 
 
-def invariants(cur, ref, chaos, arrivals):
-    """The always-on gates: token identity, goodput, exactly-once."""
+def invariants(cur, ref, chaos, snap, arrivals):
+    """The always-on gates: token identity, goodput, exactly-once +
+    snapshot provenance, and snapshots strictly saving re-prefill."""
     failures = []
-    got, want = chaos.tokens_by_gid(), ref.tokens_by_gid()
-    diverged = [g for g in want if got.get(g) != want[g]]
-    if set(got) != set(want) or diverged:
-        failures.append(f"token identity broke for gid(s) "
-                        f"{diverged or sorted(set(want) ^ set(got))}")
+    want = ref.tokens_by_gid()
+    for label, run in (("chaos", chaos), ("snapshot", snap)):
+        got = run.tokens_by_gid()
+        diverged = [g for g in want if got.get(g) != want[g]]
+        if set(got) != set(want) or diverged:
+            failures.append(f"{label}: token identity broke for gid(s) "
+                            f"{diverged or sorted(set(want) ^ set(got))}")
+        findings = check_exactly_once(list(run.traces.values())) + \
+            check_snapshot_provenance(list(run.traces.values()))
+        for f in findings:
+            failures.append(f"{label}: {f.severity} {f.klass} "
+                            f"[{f.location}] {f.message}")
+        if run.failed or run.rejected:
+            failures.append(f"{label}: {len(run.failed)} failed / "
+                            f"{len(run.rejected)} rejected — the plan "
+                            f"leaves capacity, every request must complete")
     if cur["chaos"]["goodput"] != 1.0 or \
             cur["chaos"]["completed"] != len(arrivals):
         failures.append(
             f"goodput {cur['chaos']['goodput']:g} "
             f"({cur['chaos']['completed']}/{len(arrivals)}) — the plan "
             f"leaves capacity, every request must complete")
-    findings = check_exactly_once(list(chaos.traces.values()))
-    for f in findings:
-        failures.append(f"exactly_once: {f.severity} {f.klass} "
-                        f"[{f.location}] {f.message}")
     if not chaos.recoveries:
         failures.append("the crash recovered nothing in flight — the plan "
                         "no longer exercises failover; move the crash tick")
+    # the snapshot leg must actually restore, and must pay STRICTLY less
+    # re-prefill than the from-zero leg while summing to the same cost
+    sn = cur["snapshots"]
+    if sn["restores"] == 0 or sn["saved_tokens"] == 0:
+        failures.append("the snapshot run restored nothing — move the "
+                        "crash tick past a snapshot interval")
+    if sn["reprefill_tokens"] >= cur["chaos"]["reprefill_tokens"]:
+        failures.append(
+            f"snapshot re-prefill ({sn['reprefill_tokens']} tokens) is "
+            f"not strictly below the from-zero baseline "
+            f"({cur['chaos']['reprefill_tokens']})")
+    if sn["saved_tokens"] + sn["reprefill_tokens"] != \
+            cur["chaos"]["reprefill_tokens"]:
+        failures.append(
+            f"saved ({sn['saved_tokens']}) + paid "
+            f"({sn['reprefill_tokens']}) re-prefill tokens != the "
+            f"from-zero cost ({cur['chaos']['reprefill_tokens']})")
     return failures
 
 
@@ -157,23 +210,32 @@ def main(argv=None):
             "node_crash,node=1,step=10;pim_degraded,node=0,step=6,until=24")
     plan.validate(REPLICAS)
 
-    cur, ref, chaos, arrivals = collect(plan)
+    cur, ref, chaos, snap, arrivals = collect(plan)
     c = cur["chaos"]
     print(f"[chaos-guard] {len(plan.events)} fault(s): goodput "
           f"{c['goodput']:g} ({c['completed']}/{c['offered']}), "
           f"{c['recovered']} recovered, {c['reprefill_tokens']} re-prefill "
           f"tokens, {c['crash_inflight']} in flight at crash")
+    sn = cur["snapshots"]
+    print(f"[chaos-guard] snapshots (every "
+          f"{SNAPSHOT['snapshot_interval']} ticks, mirrored): "
+          f"{sn['events']} exports ({sn['bytes']} bytes, {sn['rows']} KV "
+          f"rows), {sn['restores']} restores; re-prefill saved/paid = "
+          f"{sn['saved_tokens']}/{sn['reprefill_tokens']} tokens "
+          f"(from-zero pays {c['reprefill_tokens']})")
     if cur["mttr_ticks"]:
         for kind, h in sorted(cur["mttr_ticks"].items()):
             print(f"[chaos-guard] MTTR {kind}: n={h['count']} "
                   f"mean={h['mean']:g} max={h['max']:g} ticks")
 
-    failures = invariants(cur, ref, chaos, arrivals)
+    failures = invariants(cur, ref, chaos, snap, arrivals)
     if failures:
         print("[chaos-guard] FAIL: " + "; ".join(failures))
         return 1
-    print("[chaos-guard] invariants OK: tokens identical to fault-free, "
-          "goodput 1.0, exactly-once clean")
+    print("[chaos-guard] invariants OK: tokens identical to fault-free "
+          "(with and without snapshots), goodput 1.0, exactly-once + "
+          "snapshot-provenance clean, snapshot re-prefill strictly below "
+          "from-zero")
 
     if args.out:
         with open(args.out, "w") as f:
@@ -187,9 +249,13 @@ def main(argv=None):
         for node, trace in chaos.traces.items():
             path = os.path.join(DATA_DIR, f"chaos_node{node}.jsonl")
             trace.save(path)
+        for node, trace in snap.traces.items():
+            path = os.path.join(DATA_DIR, f"chaos_snap_node{node}.jsonl")
+            trace.save(path)
         print(f"[chaos-guard] recorded baseline -> {args.baseline}, plan "
               f"-> {args.plan}, traces -> "
-              f"{DATA_DIR}/chaos_node{{0..{REPLICAS - 1}}}.jsonl")
+              f"{DATA_DIR}/chaos_node{{0..{REPLICAS - 1}}}.jsonl + "
+              f"chaos_snap_node{{0..{REPLICAS - 1}}}.jsonl")
         return 0
 
     with open(args.baseline) as f:
@@ -203,6 +269,10 @@ def main(argv=None):
         if cur["chaos"][key] != base["chaos"][key]:
             drift.append(f"chaos.{key} {cur['chaos'][key]!r} != baseline "
                          f"{base['chaos'][key]!r}")
+    for key in GUARDED_SNAP + ("reprefill_tokens", "recoveries"):
+        if cur["snapshots"][key] != base["snapshots"][key]:
+            drift.append(f"snapshots.{key} {cur['snapshots'][key]!r} != "
+                         f"baseline {base['snapshots'][key]!r}")
     for key in ("mttr_ticks", "faults", "recoveries", "failed", "rejected"):
         if cur[key] != base[key]:
             drift.append(f"{key} {cur[key]!r} != baseline {base[key]!r}")

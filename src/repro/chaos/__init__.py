@@ -14,9 +14,10 @@ from repro.chaos.faults import (DEGRADED_PENALTY, FAULT_KINDS, FaultEvent,
                                 FaultPlan, FleetHealth)
 from repro.chaos.recovery import (ChaosResult, RecoveryItem,
                                   inflight_from_events, serve_fleet_chaos)
+from repro.chaos.snapshots import SnapshotStore
 
 __all__ = [
     "DEGRADED_PENALTY", "FAULT_KINDS", "FaultEvent", "FaultPlan",
     "FleetHealth", "ChaosResult", "RecoveryItem", "inflight_from_events",
-    "serve_fleet_chaos",
+    "serve_fleet_chaos", "SnapshotStore",
 ]

@@ -171,6 +171,64 @@ class FaultPlan:
         return cls(events=events)
 
     @classmethod
+    def from_cost_model(cls, sim_result, seed: int, *, replicas: int = 2,
+                        horizon: int = 32,
+                        pim_refresh_threshold: float = 0.5,
+                        thermal_threshold: float = 40.0) -> "FaultPlan":
+        """Derive a fault schedule from a SIMULATED cost model instead of
+        hand-writing one: ``sim_result`` is a ``repro.sim`` ``SimResult``
+        (or its ``to_dict()`` export). Two physical failure modes map to
+        fault windows:
+
+        * PIM refresh storms — PIM-array utilization above
+          ``pim_refresh_threshold`` means refresh windows can no longer
+          hide behind idle banks; the excess becomes ``pim_degraded``
+          windows (more and wider the hotter the array runs).
+        * thermal throttling — energy density
+          (``repro.sim.energy.energy_of(...).total / makespan``, pJ per
+          simulated time unit) above ``thermal_threshold`` becomes a
+          ``slow_node`` window whose factor scales with the excess.
+
+        ``random.Random(seed)`` places the windows (jitter only — WHAT
+        faults exist is a pure function of the cost model), so the same
+        (sim_result, seed) pair yields the identical plan forever."""
+        from repro.sim.energy import energy_of
+        if isinstance(sim_result, dict):
+            makespan = float(sim_result.get("makespan", 0.0))
+            pim_util = float(
+                sim_result.get("utilization", {}).get("PIM", 0.0))
+            energy = dict(sim_result.get("energy", {}))
+        else:
+            makespan = float(sim_result.makespan)
+            pim_util = float(sim_result.group_utilization("PIM"))
+            energy = dict(sim_result.energy)
+        rng = random.Random(seed)
+        events: List[FaultEvent] = []
+        if pim_util > pim_refresh_threshold:
+            excess = (pim_util - pim_refresh_threshold) \
+                / max(1.0 - pim_refresh_threshold, 1e-9)
+            n_windows = 1 + int(min(excess, 1.0) * 2)       # 1..3
+            width = max(2, int(round(min(excess, 1.0) * horizon / 2)))
+            for _ in range(n_windows):
+                node = rng.randrange(replicas)
+                step = rng.randrange(1, max(horizon - width, 2))
+                events.append(FaultEvent("pim_degraded", node, step,
+                                         until=step + width))
+        energy = {k: float(energy.get(k, 0.0))
+                  for k in ("mu_flops", "vu_elems", "dram_bytes",
+                            "pim_bytes")}
+        density = energy_of(energy).total / makespan if makespan else 0.0
+        if density > thermal_threshold:
+            # each doubling of the thermal excess throttles one step more
+            factor = 2 + int(min(density / thermal_threshold - 1.0, 2.0))
+            width = max(4, horizon // 4)
+            node = rng.randrange(replicas)
+            step = rng.randrange(1, max(horizon - width, 2))
+            events.append(FaultEvent("slow_node", node, step,
+                                     until=step + width, factor=factor))
+        return cls(events=events, seed=seed)
+
+    @classmethod
     def generate(cls, seed: int, replicas: int, horizon: int, *,
                  n_faults: int = 3) -> "FaultPlan":
         """Seeded random plan: at most one crash (never the whole fleet),

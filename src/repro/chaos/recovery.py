@@ -15,12 +15,18 @@ Recovery protocol (per crashed node, at the crash tick):
    against the engine's host state: the trace alone must be enough to
    recover from, or replaying a recorded crash couldn't work.
 2. Each captured request re-enters the router (health-aware: the dead
-   node has left the ring) after an exponential backoff —
-   ``backoff * 2**(retry-1)`` ticks — and is recovered by RE-PREFILLING
-   prompt + generated-prefix on its new node with the remaining budget.
-   Greedy decode is prefix-deterministic, so the continuation is
-   bit-identical to the fault-free run; the fleet pays the repeated
-   prefill FLOPs (recorded as ``reprefill_tokens``), never wrong tokens.
+   node has left the ring) after a clamped exponential backoff —
+   ``min(backoff * 2**(retry-1), backoff_cap)`` ticks — and is recovered
+   on its new node with the remaining budget. With snapshots enabled
+   (``snapshot_interval > 0``) the newest durable ``SnapshotStore``
+   record seeds the survivor's slot with the checkpointed KV prefix and
+   only the UNCHECKPOINTED suffix re-prefills; without one (crash before
+   the first snapshot, or a non-durable record) the full
+   prompt + generated-prefix re-prefills from zero. Greedy decode is
+   prefix-deterministic and KV rows are a pure function of the token
+   sequence, so either path continues bit-identical to the fault-free
+   run; the fleet pays only the suffix FLOPs (``reprefill_tokens``; the
+   checkpointed part is ``restored_tokens``), never wrong tokens.
 3. Every request completes on EXACTLY ONE node or is recorded as
    terminal ``failed``/``reject`` — nothing is silently dropped. The
    retry budget bounds the loop; prompt+prefix overflowing the KV cache
@@ -37,6 +43,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.chaos.faults import FaultEvent, FaultPlan, FleetHealth
+from repro.chaos.snapshots import SnapshotStore
 from repro.fleet.router import make_router
 from repro.obs.metrics import MetricsHub
 from repro.serve.engine import AdmissionRejected, ServeEngine
@@ -105,6 +112,8 @@ class ChaosResult:
     failed: Dict[int, str] = field(default_factory=dict)    # gid -> reason
     rejected: Dict[int, str] = field(default_factory=dict)  # gid -> reason
     recoveries: List[dict] = field(default_factory=list)
+    # SnapshotStore.summary() when snapshots were enabled, else None
+    snapshots: Optional[dict] = None
 
     @property
     def served(self) -> int:
@@ -125,23 +134,36 @@ def serve_fleet_chaos(cfg, params, scfg, arrivals: List[ArrivalEvent],
                       plan: FaultPlan, *, replicas: int = 2,
                       routing: str = "round_robin", prefix_len: int = 8,
                       retry_budget: int = 3, backoff: int = 1,
+                      backoff_cap: int = 64, snapshot_interval: int = 0,
+                      snapshot_mirror: bool = False, snapshot_dir=None,
                       stream_dir=None,
                       max_steps: int = 100_000) -> ChaosResult:
     """Serve one open-loop arrival stream through ``replicas`` engines
     under ``plan``. Deterministic end to end: same (workload seed, plan,
     routing) ⇒ identical fault schedule, routing decisions, recovery
     placements and greedy tokens. ``stream_dir`` turns on crash-safe
-    per-node JSONL streaming (``node<N>.jsonl``)."""
+    per-node JSONL streaming (``node<N>.jsonl``). ``snapshot_interval``
+    > 0 turns on incremental KV snapshots every that many fleet ticks —
+    mirrored to a ring peer with ``snapshot_mirror``, disk-backed under
+    ``snapshot_dir`` — so failover re-prefills only the suffix past the
+    newest durable snapshot."""
     if retry_budget < 1:
         raise ValueError(f"retry_budget must be >= 1, got {retry_budget}")
     if backoff < 1:
         raise ValueError(f"backoff must be >= 1, got {backoff}")
+    if backoff_cap < backoff:
+        raise ValueError(
+            f"backoff_cap ({backoff_cap}) must be >= backoff ({backoff})")
     plan.validate(replicas)
     router = make_router(routing, replicas, prefix_len=prefix_len)
     health = FleetHealth(replicas)
+    store = SnapshotStore(root=snapshot_dir) if snapshot_interval > 0 \
+        else None
     fleet_desc = {"replicas": replicas, "routing": routing}
     chaos_desc = {"plan": plan.to_dict(), "retry_budget": retry_budget,
-                  "backoff": backoff}
+                  "backoff": backoff, "backoff_cap": backoff_cap,
+                  "snapshot_interval": snapshot_interval,
+                  "snapshot_mirror": bool(snapshot_mirror)}
     engines: Dict[int, ServeEngine] = {}
     hubs: Dict[int, MetricsHub] = {}
     recs: Dict[int, TraceRecorder] = {}
@@ -193,6 +215,18 @@ def serve_fleet_chaos(cfg, params, scfg, arrivals: List[ArrivalEvent],
         item.retry += 1
         node = router.route(full, ordered, health=health)
         eng = engines[node]
+        # newest durable snapshot covering this request: seed the
+        # survivor's slot with its [0, prefix_len) KV rows and re-prefill
+        # only the suffix; fall back to from-zero when none covers it
+        restore = None
+        if (store is not None and item.crash_origin
+                and eng.snapshot_supported):
+            rec = store.lookup(item.gid)
+            if (rec is not None and rec["cache"] is not None
+                    and 0 < rec["prefix_len"] <= len(full) - 1):
+                restore = {"prefix_len": rec["prefix_len"],
+                           "cache": rec["cache"], "bytes": rec["bytes"],
+                           "snapshot_step": rec["tick"]}
         try:
             cap = health.reject_cap(node)
             if cap is not None and len(eng.queue) >= cap:
@@ -200,25 +234,38 @@ def serve_fleet_chaos(cfg, params, scfg, arrivals: List[ArrivalEvent],
                     f"queue_reject fault window (cap={cap})")
             rid = eng.add_request(full, item.max_new - len(item.generated),
                                   arrival_step=item.arrival_step,
-                                  gid=item.gid)
+                                  gid=item.gid, restore=restore)
         except AdmissionRejected:
             if item.retry >= retry_budget:
                 terminal(t, item, "retry_budget")
             else:
-                due = t + backoff * 2 ** (item.retry - 1)
+                due = t + min(backoff * 2 ** (item.retry - 1), backoff_cap)
                 waiting.append((due, item.gid, item))
             return
         res.assignments.append((item.gid, node, rid))
         res.placements[item.gid] = (node, rid, list(item.generated))
         if item.crash_origin:
+            restored = restore["prefix_len"] if restore is not None else 0
+            if store is not None:
+                if restore is not None:
+                    # the new owner extends this record's deltas
+                    store.reassign(item.gid, node)
+                else:
+                    # from-zero fallback: any stale record is void
+                    store.drop(item.gid)
             recs[node].on_recover(t, item.gid, rid, item.from_node,
                                   item.crash_step, len(item.generated),
-                                  int(len(full)), item.retry)
+                                  int(len(full)) - restored, item.retry,
+                                  restored_tokens=restored)
             res.recoveries.append({
                 "step": t, "gid": item.gid, "rid": rid, "node": node,
                 "from_node": item.from_node, "crash_step": item.crash_step,
                 "prefix_tokens": len(item.generated),
-                "reprefill_tokens": int(len(full)), "retry": item.retry})
+                "reprefill_tokens": int(len(full)) - restored,
+                "restored_tokens": restored,
+                "snapshot_step": restore["snapshot_step"]
+                if restore is not None else None,
+                "retry": item.retry})
 
     def crash(t: int, node: int) -> None:
         eng, rec = engines[node], recs[node]
@@ -234,6 +281,10 @@ def serve_fleet_chaos(cfg, params, scfg, arrivals: List[ArrivalEvent],
                   if e.get("type") == "request"}
         eng.halt()
         rec.on_fault(t, "node_crash", "begin", inflight=len(state))
+        if store is not None:
+            # apply the crash to snapshot durability: disk-backed records
+            # go lazy-reload, mirrored ones survive, the rest are gone
+            store.drop_node(node, alive=health.alive)
         for d in state:
             gid = gid_of[d["rid"]]
             item = RecoveryItem(gid=gid, prompt=d["prompt"],
@@ -243,7 +294,7 @@ def serve_fleet_chaos(cfg, params, scfg, arrivals: List[ArrivalEvent],
                                 from_node=node, crash_step=t)
             # prior placement is void: the request is in flight again
             res.placements.pop(gid, None)
-            waiting.append((t + backoff, gid, item))
+            waiting.append((t + min(backoff, backoff_cap), gid, item))
 
     pending = sorted(range(len(arrivals)), key=lambda g: arrivals[g].step)
     i = 0
@@ -301,9 +352,37 @@ def serve_fleet_chaos(cfg, params, scfg, arrivals: List[ArrivalEvent],
                 for rid, tok in eng.step():
                     res.results[node].setdefault(rid, []).append(tok)
                 next_ok[node] = t + health.step_cost(node)
+        # 6. snapshot tick: every alive node exports the KV delta of its
+        #    ready slots since its last snapshot. A node that crashed at
+        #    this tick halted in phase 1, so every record it owns has
+        #    tick < its crash tick — snapshots strictly happen-before the
+        #    crashes they recover.
+        if store is not None and t > 0 and t % snapshot_interval == 0:
+            for node, eng in engines.items():
+                if not health.alive(node) or not eng.snapshot_supported:
+                    continue
+                entries = eng.export_kv_snapshot(since=store.since(node))
+                if not entries:
+                    continue
+                mirror = None
+                if snapshot_mirror:
+                    for k in range(1, replicas):
+                        peer = (node + k) % replicas
+                        if health.alive(peer):
+                            mirror = peer
+                            break
+                store.put(node, entries, tick=t, mirror_node=mirror)
+                for e in entries:
+                    recs[node].on_snapshot(
+                        t, gid=e["gid"], rid=e["rid"], slot=e["slot"],
+                        base=e["base"], prefix_len=e["prefix_len"],
+                        nbytes=e["bytes"], durable=store.disk_backed,
+                        mirror_node=mirror)
     else:
         raise RuntimeError(
             f"chaos workload did not drain in {max_steps} ticks")
+    if store is not None:
+        res.snapshots = store.summary()
     res.traces = {n: recs[n].to_trace() for n in engines}
     for n in engines:
         recs[n].close()

@@ -3,7 +3,12 @@ from repro.checkpoint.store import (
     load_checkpoint,
     latest_step,
     CheckpointManager,
+    atomic_save_arrays,
+    load_arrays,
+    flatten_tree,
+    unflatten_into,
 )
 
 __all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
-           "CheckpointManager"]
+           "CheckpointManager", "atomic_save_arrays", "load_arrays",
+           "flatten_tree", "unflatten_into"]

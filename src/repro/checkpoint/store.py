@@ -25,7 +25,9 @@ import jax
 import numpy as np
 
 
-def _flatten(tree) -> Dict[str, Any]:
+def flatten_tree(tree) -> Dict[str, Any]:
+    """Tree -> flat {"/".join(path): leaf} dict — the stable key scheme
+    shards, manifests and KV snapshots all address leaves by."""
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
@@ -34,7 +36,10 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
-def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+def unflatten_into(template, flat: Dict[str, np.ndarray]):
+    """Rebuild ``template``'s structure from a ``flatten_tree`` dict; leaf
+    shapes must match (a snapshot/checkpoint for a different serve shape is
+    a hard error, not a silent broadcast)."""
     paths = jax.tree_util.tree_flatten_with_path(template)[0]
     treedef = jax.tree.structure(template)
     leaves = []
@@ -48,6 +53,65 @@ def _unflatten_into(template, flat: Dict[str, np.ndarray]):
     return jax.tree.unflatten(treedef, leaves)
 
 
+# backward-compatible private aliases (historical callers)
+_flatten = flatten_tree
+_unflatten_into = unflatten_into
+
+
+def atomic_save_arrays(final: str, arrays: Dict[str, np.ndarray], *,
+                       metadata: Optional[dict] = None,
+                       extra: Optional[dict] = None) -> None:
+    """Publish a flat {key: array} dict at directory ``final`` atomically:
+    write to ``<final>.tmp/`` (uint8-view npz — bf16 & friends are
+    ml_dtypes extensions numpy can't serialize — plus an fsynced JSON
+    manifest carrying shape/dtype per leaf), then rename. A crash mid-save
+    never corrupts a previously published directory; a torn ``.tmp`` is
+    simply never visible under ``final``. Shared by checkpointing and the
+    chaos ``SnapshotStore``."""
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    raw = {k: np.ascontiguousarray(v).view(np.uint8)
+           for k, v in arrays.items()}
+    np.savez(os.path.join(tmp, "shard_0.npz"), **raw)
+    manifest = dict(extra or {})
+    manifest["leaves"] = {k: {"shape": list(np.shape(v)),
+                              "dtype": str(np.asarray(v).dtype)}
+                          for k, v in arrays.items()}
+    manifest["metadata"] = metadata or {}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+
+def _np_dtype(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # registered numpy extension dtypes (bf16, fp8)
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def load_arrays(path: str):
+    """Read an ``atomic_save_arrays`` directory back: (flat arrays dict,
+    metadata). Views the raw uint8 shards back through the manifest's
+    shape/dtype, ml_dtypes included."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "shard_0.npz")) as z:
+        flat = {}
+        for k in z.files:
+            info = manifest["leaves"][k]
+            flat[k] = z[k].view(_np_dtype(info["dtype"])) \
+                          .reshape(info["shape"])
+    return flat, manifest["metadata"]
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree, *,
                     metadata: Optional[dict] = None, keep: int = 3,
                     executor: Optional[ThreadPoolExecutor] = None
@@ -57,31 +121,9 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *,
     host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
     def _write():
-        tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
-        final = os.path.join(ckpt_dir, f"step_{step}")
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        flat = _flatten(host)
-        # bfloat16 & friends are ml_dtypes extensions numpy can't serialize:
-        # store raw byte views; the manifest carries shape + dtype.
-        raw = {k: np.ascontiguousarray(v).view(np.uint8)
-               for k, v in flat.items()}
-        np.savez(os.path.join(tmp, "shard_0.npz"), **raw)
-        manifest = {
-            "step": step,
-            "leaves": {k: {"shape": list(np.shape(v)),
-                           "dtype": str(np.asarray(v).dtype)}
-                       for k, v in flat.items()},
-            "metadata": metadata or {},
-        }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+        atomic_save_arrays(os.path.join(ckpt_dir, f"step_{step}"),
+                           flatten_tree(host), metadata=metadata,
+                           extra={"step": step})
         _gc(ckpt_dir, keep)
 
     if executor is not None:
@@ -119,28 +161,13 @@ def load_checkpoint(ckpt_dir: str, step: int, template, *,
     """Restore into the structure of `template`. With `shardings` (a
     matching tree of NamedSharding — possibly for a DIFFERENT mesh than the
     checkpoint was written from), leaves are placed shard-by-shard."""
-    import ml_dtypes  # registered numpy extension dtypes (bf16, fp8, ...)
-
-    def _dtype(name: str):
-        try:
-            return np.dtype(name)
-        except TypeError:
-            return np.dtype(getattr(ml_dtypes, name))
-
-    path = os.path.join(ckpt_dir, f"step_{step}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    with np.load(os.path.join(path, "shard_0.npz")) as z:
-        flat = {}
-        for k in z.files:
-            info = manifest["leaves"][k]
-            flat[k] = z[k].view(_dtype(info["dtype"])).reshape(info["shape"])
-    tree = _unflatten_into(template, flat)
+    flat, meta = load_arrays(os.path.join(ckpt_dir, f"step_{step}"))
+    tree = unflatten_into(template, flat)
     if shardings is not None:
         tree = jax.tree.map(jax.device_put, tree, shardings)
     else:
         tree = jax.tree.map(jax.numpy.asarray, tree)
-    return tree, manifest["metadata"]
+    return tree, meta
 
 
 class CheckpointManager:

@@ -157,6 +157,11 @@ class FleetMetrics:
             "crash_inflight": m.counter("crash_inflight").value,
             "reprefill_tokens":
                 m.counter("recovery_reprefill_tokens").value,
+            "restored_tokens":
+                m.counter("recovery_restored_tokens").value,
+            # fleet-wide KV-snapshot rollup: merged counters, exact
+            # restore-hit-rate over all recoveries (all-zero when off)
+            "snapshots": m.snapshot_summary(),
             "mttr_ticks": mttr,
             "faults": {n[len("faults_"):]: m._metrics[n].value
                        for n in sorted(m._metrics)

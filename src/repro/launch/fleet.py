@@ -96,9 +96,23 @@ def main(argv=None):
     ap.add_argument("--backoff", type=int, default=1,
                     help="base re-placement backoff in fleet ticks "
                          "(doubles per retry)")
+    ap.add_argument("--backoff-cap", type=int, default=64,
+                    help="clamp on the exponential re-placement backoff "
+                         "(fleet ticks)")
     ap.add_argument("--queue-cap", type=int, default=0,
                     help="bounded admission queue per replica (0 = "
                          "unbounded)")
+    # incremental KV snapshots (repro.chaos.snapshots)
+    ap.add_argument("--snapshot-interval", type=int, default=0,
+                    help="export incremental KV snapshots every N fleet "
+                         "ticks so failover re-prefills only the suffix "
+                         "(0 = off)")
+    ap.add_argument("--snapshot-mirror", action="store_true",
+                    help="mirror each snapshot to the next alive replica "
+                         "in the ring")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="disk-back snapshots here with the atomic-write "
+                         "discipline (survives any crash)")
     args = ap.parse_args(argv)
 
     if args.routing not in ROUTING_POLICIES:
@@ -143,6 +157,10 @@ def main(argv=None):
                                   prefix_len=args.prefix_len,
                                   retry_budget=args.retry_budget,
                                   backoff=args.backoff,
+                                  backoff_cap=args.backoff_cap,
+                                  snapshot_interval=args.snapshot_interval,
+                                  snapshot_mirror=args.snapshot_mirror,
+                                  snapshot_dir=args.snapshot_dir,
                                   stream_dir=args.traces_out)
     else:
         fleet = serve_fleet(cfg, params, scfg, arrivals,
@@ -209,6 +227,14 @@ def main(argv=None):
               f"{c['recovered']} recovered "
               f"({c['reprefill_tokens']} re-prefill tokens), "
               f"{len(c['failed'])} failed, {len(c['rejected'])} rejected")
+        sn = c.get("snapshots") or {}
+        if sn.get("events"):
+            print(f"[fleet] snapshots: {sn['events']} exports "
+                  f"({sn['bytes']} bytes, {sn['rows']} KV rows), "
+                  f"{sn['restores']} restores "
+                  f"(hit rate {sn['restore_hit_rate']:.2f}), re-prefill "
+                  f"saved/paid = {sn['saved_tokens']}/{sn['paid_tokens']} "
+                  f"tokens")
 
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:

@@ -114,10 +114,17 @@ def _expand(patterns: List[str]) -> List[str]:
 
 
 def _load_trace(path: str) -> Trace:
-    """Load one trace with CLI-grade errors (one line, no traceback)."""
+    """Load one trace with CLI-grade errors (one line, no traceback).
+    Loads tolerantly (``strict=False``): corrupt interior lines are
+    skipped with a warning and surfaced as a count, so one flipped bit in
+    a long recording does not make the whole report unreachable."""
     from repro.trace.schema import TraceSchemaError
     try:
-        return Trace.load(path)
+        trace = Trace.load(path, strict=False)
+        if trace.skipped_lines:
+            print(f"[stats] WARNING: {path}: skipped "
+                  f"{trace.skipped_lines} corrupt line(s)")
+        return trace
     except FileNotFoundError:
         raise SystemExit(f"[stats] error: trace file not found: {path}")
     except IsADirectoryError:

@@ -10,7 +10,11 @@ and the reference-DAG diff of every lowered step. Traces are then grouped
 by fleet (identical ``fleet`` header on schema-v6+ traces; solo traces
 form singleton groups) and each group is audited by the exactly-once pass
 (``verify.exactly_once``): no activity after a recorded crash, no
-duplicate completions across replicas, every arrival accounted. Plus one
+duplicate completions across replicas, every arrival accounted — and by
+the snapshot-provenance pass (``verify.snapshot_provenance``): every
+restored KV prefix covered by durable snapshot exports that happened
+strictly before the crash, with the saved-vs-paid re-prefill split
+adding up. Plus one
 AST pass over ``<src>/serve``, ``<src>/sched``, ``<src>/obs``,
 ``<src>/fleet`` and ``<src>/chaos`` for host-sync calls outside the
 allowlist (default: ``<src>/verify/sync_allowlist.txt`` when present) —
@@ -33,8 +37,8 @@ from typing import List
 from repro.trace.lower import trace_to_commands
 from repro.trace.schema import Trace, TraceSchemaError
 from repro.verify import (Finding, analyze_lowered, check_exactly_once,
-                          lint_host_syncs, lint_trace, load_allowlist,
-                          verify_lowered_step)
+                          check_snapshot_provenance, lint_host_syncs,
+                          lint_trace, load_allowlist, verify_lowered_step)
 from repro.trace.schema import model_config_from_header
 
 
@@ -100,14 +104,17 @@ def main(argv=None) -> int:
                                   tr.header.get("chaos")], sort_keys=True)
             groups.setdefault(key, []).append((path, tr))
         for key, members in sorted(groups.items()):
-            fs = check_exactly_once([tr for _, tr in members])
             names = ", ".join(p for p, _ in members)
-            for f in fs:
-                print(f"[verify] exactly_once[{names}]: {f.severity} "
-                      f"{f.klass} [{f.location}] {f.message}")
-            print(f"[verify] exactly_once over {len(members)} trace(s) "
-                  f"[{names}]: {len(fs)} finding(s)")
-            findings.extend(fs)
+            for pass_name, check in (
+                    ("exactly_once", check_exactly_once),
+                    ("snapshot_provenance", check_snapshot_provenance)):
+                fs = check([tr for _, tr in members])
+                for f in fs:
+                    print(f"[verify] {pass_name}[{names}]: {f.severity} "
+                          f"{f.klass} [{f.location}] {f.message}")
+                print(f"[verify] {pass_name} over {len(members)} trace(s) "
+                      f"[{names}]: {len(fs)} finding(s)")
+                findings.extend(fs)
     allowlist = []
     allow_path = args.allowlist or os.path.join(args.src, "verify",
                                                 "sync_allowlist.txt")

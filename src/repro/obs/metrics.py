@@ -432,11 +432,29 @@ class MetricsHub:
         self.counter("requests_recovered").inc()
         self.counter("recovery_reprefill_tokens").inc(
             int(ev["reprefill_tokens"]))
+        # schema v8: tokens seeded from a KV snapshot instead of paid for
+        # again — reprefill (paid) + restored (saved) = from-zero cost
+        self.counter("recovery_restored_tokens").inc(
+            int(ev.get("restored_tokens", 0)))
         # downtime = crash tick -> the re-prefill re-entering service; the
         # per-gid MTTR-to-next-token joins this with the new lifecycle
         self.histogram("recovery_downtime_ticks").observe(
             int(ev["step"]) - int(ev["crash_step"]))
         self.histogram("recovery_retries").observe(int(ev["retry"]))
+
+    # ---- snapshot events (schema v8, repro.chaos.snapshots) ---------------- #
+    def _on_snapshot(self, ev: dict) -> None:
+        # fires on the EXPORTING node's hub: one KV delta left for the store
+        self.counter("snapshot_events").inc()
+        self.counter("snapshot_bytes").inc(int(ev["bytes"]))
+        self.counter("snapshot_rows").inc(
+            int(ev["prefix_len"]) - int(ev.get("base", 0)))
+
+    def _on_restore(self, ev: dict) -> None:
+        # fires on the DESTINATION node's hub: a snapshot seeded a slot here
+        self.counter("requests_restored").inc()
+        self.counter("restore_bytes").inc(int(ev["bytes"]))
+        self.histogram("restore_prefix_len").observe(int(ev["prefix_len"]))
 
     def _on_failed(self, ev: dict) -> None:
         self.counter("requests_failed").inc()
@@ -504,6 +522,30 @@ class MetricsHub:
                 self.counter("recovery_reprefill_tokens").value,
             "recovery_downtime_ticks":
                 self.histogram("recovery_downtime_ticks").summary(),
+            "snapshots": self.snapshot_summary(),
+        }
+
+    def snapshot_summary(self) -> dict:
+        """KV-snapshot accounting (all-zero when snapshots are off):
+        export volume, restore hit rate over recoveries, and the
+        saved-vs-paid re-prefill split (saved = restored from snapshots,
+        paid = actually re-prefilled; their sum is the from-zero cost)."""
+        recovered = self.counter("requests_recovered").value
+        restores = self.counter("requests_restored").value
+        return {
+            "events": self.counter("snapshot_events").value,
+            "bytes": self.counter("snapshot_bytes").value,
+            "rows": self.counter("snapshot_rows").value,
+            "restores": restores,
+            "restore_bytes": self.counter("restore_bytes").value,
+            "restore_hit_rate": (restores / recovered if recovered
+                                 else 0.0),
+            "saved_tokens":
+                self.counter("recovery_restored_tokens").value,
+            "paid_tokens":
+                self.counter("recovery_reprefill_tokens").value,
+            "restore_prefix_len":
+                self.histogram("restore_prefix_len").summary(),
         }
 
     def valid_token_fraction(self) -> float:

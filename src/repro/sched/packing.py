@@ -162,18 +162,23 @@ def plan_packed_job(wave: List[Tuple[int, object]], *, max_slots: int,
     every lane still fits one dispatch nothing changes at all.
     """
     B, C = max_slots, chunk
-    items = []                          # (total_len, slot, req, [pieces])
+    items = []                          # (body_len, slot, req, [pieces])
     zero_prefill: List[Tuple[int, object]] = []
     for slot, req in wave:
         p = np.asarray(req.prompt, np.int32)[:-1]
-        if len(p) == 0:
+        # a restored request (KV snapshot failover) already holds positions
+        # [0, prefill_start) in its slot's cache — only the suffix prefills;
+        # its first piece is then a continuation segment over that prefix
+        base = int(getattr(req, "prefill_start", 0) or 0)
+        body = p[base:]
+        if len(body) == 0:
             zero_prefill.append((slot, req))
             continue
-        pieces = [_Segment(slot=slot, req=req, start=c * C,
-                           tokens=p[c * C:(c + 1) * C], last=False)
-                  for c in range(-(-len(p) // C))]
+        pieces = [_Segment(slot=slot, req=req, start=base + c * C,
+                           tokens=body[c * C:(c + 1) * C], last=False)
+                  for c in range(-(-len(body) // C))]
         pieces[-1].last = True
-        items.append((len(p), slot, req, pieces))
+        items.append((len(body), slot, req, pieces))
     if not items:
         return None
 
@@ -189,7 +194,10 @@ def plan_packed_job(wave: List[Tuple[int, object]], *, max_slots: int,
     # the tail lane keeps free columns for pass 2.
     shorts: List[_Segment] = []
     for _len, _slot, _req, pieces in items:
-        if len(pieces) == 1:
+        # a single-piece body that starts past 0 (restored prefix) is a
+        # continuation segment: it must own its lane's (row_slot,
+        # prefix_len) gather, so it can't first-fit into shared lanes
+        if len(pieces) == 1 and pieces[0].start == 0:
             shorts.append(pieces[0])
             continue
         for seg in pieces:

@@ -74,6 +74,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.store import flatten_tree as _flatten_cache
+from repro.checkpoint.store import unflatten_into as _unflatten_cache
 from repro.configs.base import ModelConfig
 from repro.core.pas import phase_log_entry
 from repro.models import transformer as T
@@ -90,6 +92,13 @@ class Request:
     generated: List[int] = field(default_factory=list)
     done: bool = False
     deferred: int = 0             # admission waves this request was passed over
+    gid: Optional[int] = None     # fleet-global id (chaos/snapshot identity)
+    # KV-snapshot failover (repro.chaos.snapshots): positions
+    # [0, prefill_start) of this prompt are restored from a checkpointed
+    # prefix at admission instead of being re-prefilled; ``restore`` holds
+    # the pending snapshot payload until ``admit_wave`` scatters it.
+    prefill_start: int = 0
+    restore: Optional[dict] = None
 
 
 # Jitted entry points are cached at module level keyed by the (frozen,
@@ -291,6 +300,21 @@ class ServeEngine:
         # segregation in the packing planner reduces
         self.prefill_stats = {"token_slots": 0, "valid_tokens": 0,
                               "kv_cells": 0}
+        # KV-snapshot accounting (repro.chaos.snapshots). Export transfers
+        # are deliberately NOT counted in ``host_syncs``: that counter is
+        # the serving protocol's per-step fetch budget (one blocking sync
+        # per resolved decode/superstep, linted by repro.verify.protocol);
+        # snapshotting is a fleet-clock side channel with its own budget.
+        self.snapshot_stats = {"exports": 0, "export_bytes": 0,
+                               "export_syncs": 0, "restores": 0,
+                               "restored_tokens": 0, "restore_bytes": 0}
+        # per-slot row slices rely on every cache leaf carrying the slot
+        # axis at position 1 and the kv_seq axis at position 3 (attention
+        # K/V + int8 scales do; SSM/RWKV/enc-dec state trees do not)
+        self._snapshot_ok = self._batched_ok and all(
+            getattr(leaf, "ndim", 0) in (4, 5)
+            and leaf.shape[1] == B and leaf.shape[3] == L
+            for leaf in jax.tree.leaves(self.cache))
         self.step_idx = 0             # engine step counter (trace timeline)
         self.wave_count = 0           # admission waves (trace sub-batch ids)
         # chaos state (repro.chaos): a degraded engine serves NPU-only
@@ -306,14 +330,21 @@ class ServeEngine:
     # ---- request lifecycle ------------------------------------------------- #
     def add_request(self, prompt_tokens, max_new_tokens: int = 32,
                     arrival_step: Optional[int] = None,
-                    gid: Optional[int] = None) -> int:
+                    gid: Optional[int] = None,
+                    restore: Optional[dict] = None) -> int:
         """Queue a request. ``arrival_step`` is the TRUE open-loop arrival
         tick when it differs from the current engine clock: a decode
         superstep advances ``step_idx`` k ticks inside one dispatch, so an
         arrival landing mid-span can only be injected at the span boundary
         — the recorded ``arrival_offset`` (schema v5) preserves the real
         arrival so TTFT/queue-wait metrics don't see arrivals batched at
-        superstep boundaries."""
+        superstep boundaries.
+
+        ``restore`` attaches a KV-snapshot payload (``prefix_len``,
+        ``cache`` rows [0, prefix_len), ``bytes``, ``snapshot_step``): the
+        request admits normally, ``admit_wave`` scatters the checkpointed
+        prefix into its slot (``import_kv_snapshot``), and prefill then
+        covers only positions [prefix_len, len(prompt)-1)."""
         prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
         if len(prompt) == 0:
             raise ValueError("empty prompt")
@@ -322,13 +353,25 @@ class ServeEngine:
                              f"max_len-1 ({self.scfg.max_len - 1})")
         if self.halted:
             raise RuntimeError("engine is halted (crashed node)")
+        if restore is not None:
+            if not self.snapshot_supported:
+                raise ValueError("KV-snapshot restore needs the batched "
+                                 "attention prefill path")
+            P = int(restore["prefix_len"])
+            if not 0 < P <= len(prompt) - 1:
+                raise ValueError(f"restore prefix_len {P} outside "
+                                 f"(0, {len(prompt) - 1}]")
         if 0 < self.scfg.queue_cap <= len(self.queue):
             self.admission_rejects += 1
             raise AdmissionRejected(
                 f"admission queue at capacity ({self.scfg.queue_cap})")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new_tokens))
+        req = Request(rid, prompt, max_new_tokens, gid=gid)
+        if restore is not None:
+            req.prefill_start = int(restore["prefix_len"])
+            req.restore = restore
+        self.queue.append(req)
         if self.recorder is not None:
             offset = 0 if arrival_step is None \
                 else max(self.step_idx - arrival_step, 0)
@@ -373,6 +416,89 @@ class ServeEngine:
                             "generated": list(req.generated),
                             "resident": True, "slot": slot})
         return sorted(out, key=lambda d: d["rid"])
+
+    # ---- incremental KV snapshots (repro.chaos.snapshots) ------------------- #
+    @property
+    def snapshot_supported(self) -> bool:
+        """KV export/import works when every cache leaf is an attention
+        K/V (or int8 scale) tensor with the slot axis at position 1 and the
+        kv_seq axis at position 3 — the per-slot row slice both directions
+        rely on. SSM/RWKV/enc-dec state trees (and the sequential prefill
+        fallback) are not snapshotable."""
+        return self._snapshot_ok
+
+    def export_kv_snapshot(self, since: Optional[Dict[int, int]] = None
+                           ) -> List[dict]:
+        """Export the DELTA of every ready slot's KV state since the last
+        snapshot. ``since`` maps gid -> already-snapshotted prefix length
+        (the ``SnapshotStore``'s high-water view for this node); a slot
+        whose prefix hasn't grown exports nothing. Each entry carries the
+        new cache rows [base, prefix_len) per leaf (slot axis removed; the
+        kv_seq axis becomes axis 2) plus the host-side request state a
+        survivor needs: generated tokens, remaining budget, last token and
+        the engine rng — metadata only, never imported into a survivor.
+        ``prefix_len`` is host-derived (``len(prompt)-1+len(generated)`` ==
+        the slot's device cursor for a ready slot), so the only device
+        traffic is the row copies themselves (counted in
+        ``snapshot_stats``, not ``host_syncs``)."""
+        if not self._snapshot_ok:
+            return []
+        since = since or {}
+        entries: List[dict] = []
+        flat = _flatten_cache(self.cache)
+        for slot, req in enumerate(self.slot_req):
+            if req is None or req.done or not self.slot_ready[slot] \
+                    or req.gid is None:
+                continue
+            P = len(req.prompt) - 1 + len(req.generated)
+            base = int(since.get(req.gid, 0))
+            if P <= base:
+                continue
+            idx = (slice(None), slot, slice(None), slice(base, P))
+            rows = {k: np.asarray(leaf[idx]) for k, leaf in flat.items()}
+            nbytes = int(sum(a.nbytes for a in rows.values()))
+            self.snapshot_stats["exports"] += 1
+            self.snapshot_stats["export_bytes"] += nbytes
+            self.snapshot_stats["export_syncs"] += len(rows)
+            last = int(req.generated[-1]) if req.generated \
+                else int(req.prompt[-1])
+            entries.append({
+                "gid": req.gid, "rid": req.rid, "slot": slot,
+                "base": base, "prefix_len": P, "bytes": nbytes,
+                "cache": rows,
+                "plen": int(len(req.prompt)),
+                "generated": list(req.generated),
+                "max_new": req.max_new_tokens, "last_tok": last,
+                "lens": P, "rng": np.asarray(self._rng).tolist(),
+            })
+        return entries
+
+    def import_kv_snapshot(self, slot: int, snapshot: dict, *,
+                           gid: Optional[int] = None,
+                           rid: Optional[int] = None) -> None:
+        """Scatter a checkpointed KV prefix into ``slot``: rows
+        [0, prefix_len) of every cache leaf are overwritten with the
+        snapshot's (merged) rows. Called by ``admit_wave`` for requests
+        queued with ``restore=``; the suffix prefill and all decode writes
+        land strictly above ``prefix_len``, so the restored rows are
+        byte-identical to what a from-zero re-prefill would recompute."""
+        P = int(snapshot["prefix_len"])
+        rows = snapshot["cache"]
+        flat = _flatten_cache(self.cache)
+        idx = (slice(None), slot, slice(None), slice(0, P))
+        out = {}
+        for key, leaf in flat.items():
+            out[key] = leaf.at[idx].set(jnp.asarray(rows[key]))
+        self.cache = _unflatten_cache(self.cache, out)
+        nbytes = int(snapshot.get("bytes", 0))
+        self.snapshot_stats["restores"] += 1
+        self.snapshot_stats["restored_tokens"] += P
+        self.snapshot_stats["restore_bytes"] += nbytes
+        if self.recorder is not None:
+            self.recorder.on_restore(
+                self.step_idx, gid=gid, rid=rid, prefix_len=P,
+                nbytes=nbytes,
+                snapshot_step=int(snapshot.get("snapshot_step", -1)))
 
     def load_stats(self) -> Dict[str, int]:
         """Router hook (``repro.fleet``): the engine's instantaneous load,
@@ -466,11 +592,23 @@ class ServeEngine:
         for slot, req in admitted:
             self.slot_req[slot] = req
             self.slot_ready[slot] = False
+        # scatter checkpointed KV prefixes AFTER the batch reset: restored
+        # rows land at positions [0, prefix_len) — far below the parked
+        # write cursor — and the suffix prefill's masked writes never touch
+        # them, so co-scheduled decode steps can't clobber the restore
+        restores: List[Tuple[int, int, int]] = []
+        for slot, req in admitted:
+            if req.restore is not None:
+                self.import_kv_snapshot(slot, req.restore, gid=req.gid,
+                                        rid=req.rid)
+                restores.append((slot, req.rid, req.prefill_start))
+                req.restore = None      # payload applied; free the rows
         self.wave_count += 1
         if self.recorder is not None:
             self.recorder.on_admit(
                 self.step_idx,
-                [(int(s), r.rid, int(len(r.prompt))) for s, r in admitted])
+                [(int(s), r.rid, int(len(r.prompt))) for s, r in admitted],
+                restores=restores)
         return admitted
 
     def build_prefill_job(self, wave) -> Optional[PrefillJob]:
@@ -491,7 +629,13 @@ class ServeEngine:
         for slot, req in wave:
             p = req.prompt[:-1]
             tokens[slot, :len(p)] = p
-            valid[slot, :len(p)] = True
+            # a restored request's prefix [0, prefill_start) is already in
+            # cache: those positions stay invalid, so their rows compute as
+            # masked padding and their cache writes are dropped — only the
+            # uncheckpointed suffix prefills
+            valid[slot, req.prefill_start:len(p)] = True
+        if not valid.any():
+            return None        # every wave member was fully restored
         return PrefillJob(wave=wave, tokens=tokens, valid=valid, chunk=C,
                           n_chunks=n_chunks, sub_batch=self.wave_count - 1)
 

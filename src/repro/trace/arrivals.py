@@ -164,7 +164,7 @@ def bursty_arrivals(rate: float, horizon: int, *, vocab: int,
 
 def drive(engine, arrivals: List[ArrivalEvent],
           max_steps: int = 100_000, *, backoff: int = 4,
-          return_stats: bool = False):
+          backoff_cap: int = 64, return_stats: bool = False):
     """Open-loop serve: inject each arrival once the engine clock reaches
     its step (idle engine steps advance the clock), run until every arrival
     has been served. Returns {rid: generated tokens}; with
@@ -174,10 +174,16 @@ def drive(engine, arrivals: List[ArrivalEvent],
     A bounded admission queue (``ServeConfig.queue_cap``) can reject an
     arrival; the driver NEVER silently drops it — the arrival re-injects
     after ``backoff`` ticks (doubling per attempt, capacity pressure is
-    not helped by hammering), keeping its TRUE arrival step so the
-    recorded ``arrival_offset`` carries the full admission wait into
-    TTFT/queue-wait metrics. Every arrival is eventually served: the
-    queue drains monotonically, so a finite workload always admits."""
+    not helped by hammering — clamped at ``backoff_cap`` so a long
+    rejection streak cannot push a request's retry cadence past the
+    point where a freed queue would go unnoticed), keeping its TRUE
+    arrival step so the recorded ``arrival_offset`` carries the full
+    admission wait into TTFT/queue-wait metrics. Every arrival is
+    eventually served: the queue drains monotonically, so a finite
+    workload always admits."""
+    if backoff_cap < backoff:
+        raise ValueError(
+            f"backoff_cap ({backoff_cap}) must be >= backoff ({backoff})")
     pending = sorted(arrivals, key=lambda a: a.step)
     results: Dict[int, List[int]] = {}
     stats = {"rejected": 0}
@@ -196,7 +202,7 @@ def drive(engine, arrivals: List[ArrivalEvent],
             except AdmissionRejected:
                 stats["rejected"] += 1
                 d = delay[order]
-                delay[order] = d * 2
+                delay[order] = min(d * 2, backoff_cap)
                 retry.append((now + d, order, ev))
         while i < len(pending) and pending[i].step <= now:
             # arrival_step records the TRUE arrival tick: when a superstep
@@ -207,8 +213,9 @@ def drive(engine, arrivals: List[ArrivalEvent],
                                    arrival_step=pending[i].step)
             except AdmissionRejected:
                 stats["rejected"] += 1
-                delay[i] = backoff * 2
-                retry.append((now + backoff, i, pending[i]))
+                delay[i] = min(backoff * 2, backoff_cap)
+                retry.append((now + min(backoff, backoff_cap), i,
+                              pending[i]))
             i += 1
         if i >= len(pending) and not retry and not engine.queue \
                 and all(r is None for r in engine.slot_req):

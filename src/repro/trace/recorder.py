@@ -125,9 +125,14 @@ class TraceRecorder:
                     "gid": rid if gid is None else int(gid)})
 
     def on_admit(self, step: int,
-                 wave: List[Tuple[int, int, int]]) -> None:
+                 wave: List[Tuple[int, int, int]],
+                 restores: Iterable[Tuple[int, int, int]] = ()) -> None:
+        # restores (schema v8): [slot, rid, prefix_len] per admitted request
+        # whose slot was seeded from a KV snapshot — its prefill covers only
+        # [prefix_len, prompt) instead of the whole prompt.
         self._emit({"type": "admit", "step": step,
-                    "wave": [list(w) for w in wave]})
+                    "wave": [list(w) for w in wave],
+                    "restores": [list(r) for r in restores]})
 
     def on_prefill(self, step: int, *, offset: int, chunk: int, valid: int,
                    kv: int, slots: List[int], route: dict,
@@ -174,13 +179,39 @@ class TraceRecorder:
 
     def on_recover(self, step: int, gid: int, rid: int, from_node: int,
                    crash_step: int, prefix_tokens: int,
-                   reprefill_tokens: int, retry: int) -> None:
+                   reprefill_tokens: int, retry: int,
+                   restored_tokens: int = 0) -> None:
         # failover landed HERE: global request ``gid`` (local rid ``rid``)
-        # re-prefilled prompt+prefix after node ``from_node`` crashed
+        # re-prefilled prompt+prefix after node ``from_node`` crashed.
+        # restored_tokens (schema v8): tokens seeded from a KV snapshot
+        # instead of re-prefilled — reprefill_tokens is only the PAID
+        # suffix, so restored + reprefill = the full from-zero cost.
         self._emit({"type": "recover", "step": step, "gid": gid, "rid": rid,
                     "from_node": from_node, "crash_step": crash_step,
                     "prefix_tokens": prefix_tokens,
-                    "reprefill_tokens": reprefill_tokens, "retry": retry})
+                    "reprefill_tokens": reprefill_tokens, "retry": retry,
+                    "restored_tokens": int(restored_tokens)})
+
+    # ---- snapshot hooks (schema v8, emitted by repro.chaos.snapshots) ------ #
+    def on_snapshot(self, step: int, *, gid: int, rid: int, slot: int,
+                    base: int, prefix_len: int, nbytes: int,
+                    durable: bool = False,
+                    mirror_node: Optional[int] = None) -> None:
+        # this node exported the KV delta [base, prefix_len) for gid into
+        # the SnapshotStore; durable = the merged record is disk-backed
+        self._emit({"type": "snapshot", "step": step, "gid": gid,
+                    "rid": rid, "slot": slot, "base": base,
+                    "prefix_len": prefix_len, "bytes": int(nbytes),
+                    "durable": bool(durable), "mirror_node": mirror_node})
+
+    def on_restore(self, step: int, *, gid: int, rid: int, prefix_len: int,
+                   nbytes: int, snapshot_step: int) -> None:
+        # a snapshot landed HERE: [0, prefix_len) KV rows for gid were
+        # scattered into a fresh slot; only the suffix will re-prefill
+        self._emit({"type": "restore", "step": step, "gid": gid,
+                    "rid": rid, "prefix_len": prefix_len,
+                    "bytes": int(nbytes),
+                    "snapshot_step": int(snapshot_step)})
 
     def on_failed(self, step: int, gid: int, reason: str,
                   retries: int) -> None:
@@ -205,7 +236,8 @@ class TraceRecorder:
                 "prefill_stats": dict(e.prefill_stats),
                 "decode_deferrals": e.decode_deferrals,
                 "superstep_tokens": e.superstep_tokens,
-                "sched_stats": dict(e.scheduler.stats)}
+                "sched_stats": dict(e.scheduler.stats),
+                "snapshot_stats": dict(getattr(e, "snapshot_stats", {}))}
 
     def to_trace(self) -> Trace:
         if self._header is None:

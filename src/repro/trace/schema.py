@@ -107,6 +107,30 @@ Version history:
              request exceeded its admission retry budget; terminal
        Loading a v1-v6 trace upgrades in place: chaos=None, gid=rid (a
        fault-free standalone serve).
+  v8 — incremental KV snapshots (repro.chaos.snapshots): the header's
+       ``chaos`` dict gains ``snapshot_interval`` / ``snapshot_mirror`` /
+       ``backoff_cap`` (recovery knobs ship in the trace so a snapshot-era
+       chaos run replays bit-identically); ``admit`` events gain
+       ``restores`` — [[slot, rid, prefix_len], ...] for wave members whose
+       KV prefix was seeded from a snapshot instead of prefilled (empty for
+       ordinary waves); ``recover`` events gain ``restored_tokens`` (prefix
+       tokens restored from a durable snapshot; ``reprefill_tokens`` is now
+       the tokens actually RE-PREFILLED — the paid suffix — so
+       restored + reprefilled = the full recovered sequence). Two new event
+       types carry the snapshot timeline:
+         {"type": "snapshot", "step", "gid", "prefix_len", "bytes",
+             "rid", "slot", "base", "durable", "mirror_node"} — this node
+             exported the delta rows [base, prefix_len) of one slot's KV
+             at fleet tick ``step``; ``durable`` marks a disk-backed store,
+             ``mirror_node`` the peer replica holding a copy (null = none)
+         {"type": "restore", "step", "gid", "rid", "prefix_len", "bytes",
+             "snapshot_step"} — this node seeded a recovered request's slot
+             with a checkpointed prefix taken at ``snapshot_step``
+       ``repro.verify.check_snapshot_provenance`` audits that every
+       restored prefix is covered by durable snapshot events that
+       happened-before the crash. Loading a v1-v7 trace upgrades in place:
+       restores=[], restored_tokens=0 (pre-snapshot recovery re-prefilled
+       everything from token zero).
 """
 from __future__ import annotations
 
@@ -117,8 +141,8 @@ from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 
-SCHEMA_VERSION = 7
-SUPPORTED_VERSIONS = (1, 2, 3, 4, 5, 6, 7)
+SCHEMA_VERSION = 8
+SUPPORTED_VERSIONS = (1, 2, 3, 4, 5, 6, 7, 8)
 
 # required keys per event type (beyond "type")
 _REQUIRED: Dict[str, tuple] = {
@@ -135,6 +159,10 @@ _REQUIRED: Dict[str, tuple] = {
                 "prefix_tokens", "reprefill_tokens", "retry"),
     "failed": ("step", "gid", "reason", "retries"),
     "reject": ("step", "gid", "reason", "retries"),
+    # snapshot events (v8): incremental KV checkpoints + prefix restores
+    "snapshot": ("step", "gid", "prefix_len", "bytes"),
+    "restore": ("step", "gid", "rid", "prefix_len", "bytes",
+                "snapshot_step"),
 }
 # additional keys required from v2 / v3 on
 _REQUIRED_V2: Dict[str, tuple] = {
@@ -163,6 +191,12 @@ _REQUIRED_V6: Dict[str, tuple] = {
 _REQUIRED_V7: Dict[str, tuple] = {
     "header": ("chaos",),
     "request": ("gid",),
+}
+# additional keys required from v8 on: snapshot-aware admission and the
+# restored/re-prefilled split on recovery records
+_REQUIRED_V8: Dict[str, tuple] = {
+    "admit": ("restores",),
+    "recover": ("restored_tokens",),
 }
 _MODEL_KEYS = ("num_layers", "d_model", "num_heads", "num_kv_heads",
                "head_dim", "d_ff", "vocab_size")
@@ -199,6 +233,8 @@ def validate_event(ev: dict, version: int = SCHEMA_VERSION) -> dict:
         required = required + _REQUIRED_V6.get(t, ())
     if version >= 7:
         required = required + _REQUIRED_V7.get(t, ())
+    if version >= 8:
+        required = required + _REQUIRED_V8.get(t, ())
     missing = [k for k in required if k not in ev]
     if missing:
         raise TraceSchemaError(f"{t} event missing keys {missing}: {ev!r}")
@@ -273,6 +309,13 @@ def upgrade_event(ev: dict, version: int) -> dict:
             ev.setdefault("chaos", None)
         elif ev["type"] == "request":
             ev.setdefault("gid", ev["rid"])
+    if version < 8:
+        # pre-snapshot semantics: no KV prefix ever restored — every
+        # recovery re-prefilled the full sequence from token zero
+        if ev["type"] == "admit":
+            ev.setdefault("restores", [])
+        elif ev["type"] == "recover":
+            ev.setdefault("restored_tokens", 0)
     return ev
 
 
@@ -296,6 +339,9 @@ class Trace:
     header: dict
     events: List[dict] = field(default_factory=list)
     summary: Optional[dict] = None
+    # corrupt interior lines skipped by a strict=False load (0 on strict
+    # loads): surfaced so partially synced traces are scored knowingly
+    skipped_lines: int = 0
 
     @property
     def version(self) -> int:
@@ -330,10 +376,19 @@ class Trace:
             f.write(self.dumps())
 
     @classmethod
-    def loads(cls, text: str, *,
-              tolerate_truncation: bool = False) -> "Trace":
+    def loads(cls, text: str, *, tolerate_truncation: bool = False,
+              strict: bool = True) -> "Trace":
+        """Parse a JSONL trace. ``tolerate_truncation`` drops a torn FINAL
+        line (a replica killed mid-write). ``strict=False`` additionally
+        skips corrupt INTERIOR lines — bad JSON or schema-invalid events
+        from a partially synced snapshot-era stream — with a warning each;
+        the count lands in ``Trace.skipped_lines`` so consumers can report
+        how much of the timeline is missing. Header problems (no header,
+        duplicate header, unsupported version) stay fatal either way: a
+        trace whose identity line is gone cannot be scored honestly."""
         header, events, summary = None, [], None
         version = SCHEMA_VERSION
+        skipped = 0
         lines = text.splitlines()
         last_ln = max((i for i, ln in enumerate(lines, 1) if ln.strip()),
                       default=0)
@@ -352,6 +407,12 @@ class Trace:
                         f"trace line {ln}: dropping truncated final line "
                         f"({e})", RuntimeWarning, stacklevel=2)
                     break
+                if not strict and header is not None:
+                    warnings.warn(
+                        f"trace line {ln}: skipping corrupt interior line "
+                        f"({e})", RuntimeWarning, stacklevel=2)
+                    skipped += 1
+                    continue
                 raise TraceSchemaError(f"line {ln}: bad JSON ({e})") from e
             if isinstance(ev, dict) and ev.get("type") == "header":
                 # validate the header against its own declared version
@@ -361,7 +422,16 @@ class Trace:
                 version = ev["version"]
                 header = upgrade_event(ev, version)
                 continue
-            validate_event(ev, version)
+            try:
+                validate_event(ev, version)
+            except TraceSchemaError:
+                if not strict and header is not None:
+                    warnings.warn(
+                        f"trace line {ln}: skipping schema-invalid line",
+                        RuntimeWarning, stacklevel=2)
+                    skipped += 1
+                    continue
+                raise
             if header is None:
                 raise TraceSchemaError(
                     f"line {ln}: {ev['type']} before header")
@@ -376,13 +446,18 @@ class Trace:
                 events.append(ev)
         if header is None:
             raise TraceSchemaError("trace has no header line")
-        return cls(header=header, events=events, summary=summary)
+        return cls(header=header, events=events, summary=summary,
+                   skipped_lines=skipped)
 
     @classmethod
-    def load(cls, path, *, tolerate_truncation: bool = True) -> "Trace":
+    def load(cls, path, *, tolerate_truncation: bool = True,
+             strict: bool = True) -> "Trace":
         # files are where crashes tear lines (the chaos recorders stream
         # line-buffered JSONL): a torn FINAL line loads as a warning +
-        # drop by default; in-memory strings (loads) stay strict
+        # drop by default; in-memory strings (loads) stay strict. Pass
+        # strict=False to additionally skip corrupt INTERIOR lines
+        # (counted in ``skipped_lines``).
         with open(path) as f:
             return cls.loads(f.read(),
-                             tolerate_truncation=tolerate_truncation)
+                             tolerate_truncation=tolerate_truncation,
+                             strict=strict)

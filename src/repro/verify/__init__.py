@@ -1,7 +1,7 @@
 """repro.verify — static hazard analysis for PAS command DAGs and the
 serving protocol (the correctness gate CI runs over every shipped trace).
 
-Five passes, none of which execute anything:
+Six passes, none of which execute anything:
 
   footprints  per-Command read/write resource sets, derived from command
               kind/unit/shape metadata and naming conventions — never from
@@ -18,11 +18,17 @@ Five passes, none of which execute anything:
   exactly_once  chaos-recovery audit over a fleet's traces: no activity
               after a crash, no duplicate completions across replicas,
               every arrival accounted completed / failed / rejected
+  snapshot_provenance  KV-snapshot recovery audit: every restored prefix
+              is covered by a tiling chain of durable snapshot exports
+              that happened strictly before the crash, carried prefixes
+              match the crashed node's stream, and saved + paid re-prefill
+              tokens add up to the re-placed prompt
 
 CLI: ``python -m repro.launch.verify --traces benchmarks/data
 --src src/repro`` (see README "Static verification").
 """
 from repro.verify.exactly_once import check_exactly_once
+from repro.verify.snapshot_provenance import check_snapshot_provenance
 from repro.verify.footprints import (Footprint, Resource, bank_set,
                                      command_footprints)
 from repro.verify.hazards import (Finding, SEVERITIES, analyze_commands,
@@ -37,5 +43,5 @@ __all__ = [
     "Finding", "SEVERITIES", "analyze_commands", "analyze_lowered",
     "diff_commands", "reference_commands", "verify_lowered_step",
     "SYNC_ATTRS", "SYNC_NAMES", "lint_host_syncs", "load_allowlist",
-    "lint_trace", "check_exactly_once",
+    "lint_trace", "check_exactly_once", "check_snapshot_provenance",
 ]

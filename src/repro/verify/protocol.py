@@ -52,11 +52,12 @@ from repro.verify.hazards import Finding
 
 class _DummyReq:
     """Prompt-length stand-in for plan reconstruction (the planner only
-    reads ``req.prompt``)."""
-    __slots__ = ("prompt",)
+    reads ``req.prompt`` and ``req.prefill_start``)."""
+    __slots__ = ("prompt", "prefill_start")
 
-    def __init__(self, plen: int):
+    def __init__(self, plen: int, prefill_start: int = 0):
         self.prompt = np.zeros(plen, np.int32)
+        self.prefill_start = prefill_start
 
 
 class _Slot:
@@ -114,21 +115,34 @@ def lint_trace(trace: Trace) -> List[Finding]:
         if t == "admit":
             admit_ordinal += 1
             wave = [(int(s), int(r), int(p)) for s, r, p in ev["wave"]]
+            # schema v8: slots seeded from a KV snapshot start with their
+            # restored prefix already covered — only the suffix prefills
+            restored = {int(s): int(p) for s, _r, p
+                        in ev.get("restores", [])}
             for s, rid, plen in wave:
                 if s in slots:
                     findings.append(Finding(
                         "warning", "lifecycle",
                         f"slot {s} admitted while occupied by rid "
                         f"{slots[s].rid}", location=loc))
-                slots[s] = _Slot(rid, max(plen - 1, 0))
+                st = _Slot(rid, max(plen - 1, 0))
+                st.covered = min(restored.get(s, 0), st.need)
+                st.ready = st.ready or st.covered >= st.need
+                slots[s] = st
                 rid_slot[rid] = s
-            if pack and batched and any(p > 1 for _, _, p in wave):
+            if pack and batched and any(
+                    p - 1 > restored.get(s, 0) for s, _, p in wave):
                 plan = plan_packed_job(
-                    [(s, _DummyReq(p)) for s, _, p in wave],
+                    [(s, _DummyReq(p, restored.get(s, 0)))
+                     for s, _, p in wave],
                     max_slots=max_slots, chunk=chunk,
                     sub_batch=admit_ordinal)
                 if plan is not None:
                     jobs[admit_ordinal] = _PackedJob(plan)
+                    # restored rows were scattered at admission, before
+                    # the job's first dispatch gathers over them
+                    jobs[admit_ordinal].cum_valid = \
+                        sum(restored.values())
         elif t == "prefill":
             fused = bool(ev.get("fused", False))
             if fused:

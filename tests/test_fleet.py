@@ -267,7 +267,7 @@ def test_fleet_offline_equals_live(fleets, tmp_path):
 # --------------------------------------------------------------------------- #
 def test_v6_header_requires_fleet_fields(fleets):
     hdr = dict(fleets["least_loaded"].traces[0].header)
-    assert hdr["version"] == SCHEMA_VERSION == 7
+    assert hdr["version"] == SCHEMA_VERSION == 8
     validate_event(hdr, 6)
     del hdr["node_id"]
     with pytest.raises(TraceSchemaError):

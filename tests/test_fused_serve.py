@@ -285,7 +285,7 @@ def _downgrade(trace: Trace, version: int) -> str:
 
 def test_schema_v5_roundtrip(fused_superstep_serve, tmp_path):
     tr = fused_superstep_serve[1].to_trace()
-    assert tr.version == 7            # current schema (v7: chaos/gid)
+    assert tr.version == 8            # current schema (v8: KV snapshots)
     assert all("arrival_offset" in e for e in tr.of_type("request"))
     assert tr.header["serve"]["fuse"] is True
     assert tr.header["serve"]["superstep"] == 4

@@ -390,7 +390,7 @@ def _downgrade_to_v2(trace: Trace) -> str:
 
 def test_schema_v3_records_packing(mixed_packed, setup, tmp_path):
     tr = mixed_packed[("interleaved", True)][1].to_trace()
-    assert tr.version == 7            # current schema (v7: chaos/gid)
+    assert tr.version == 8            # current schema (v8: KV snapshots)
     assert tr.header["serve"]["pack"] is True
     pf = tr.of_type("prefill")
     assert all(e["packed"] and e["offset"] == -1 for e in pf)

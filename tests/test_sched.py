@@ -240,7 +240,7 @@ def _downgrade_to_v1(trace: Trace) -> str:
 
 def test_schema_v2_records_policy_and_overlap(mixed_workload):
     tr = mixed_workload["interleaved"][1].to_trace()
-    assert tr.version == 7                 # current schema (v7: chaos/gid)
+    assert tr.version == 8                 # current schema (v8: KV snapshots)
     assert tr.header["serve"]["policy"] == "interleaved"
     assert tr.header["serve"]["pack"] is False
     assert all("sub_batch" in e and "overlap" in e
